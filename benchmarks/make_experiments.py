@@ -1,0 +1,126 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from reports/.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments
+
+Reads reports/dryrun/*.json (baseline sweep) and reports/dryrun2/*.json
+(optimized-defaults sweep) and writes reports/tables.md, which EXPERIMENTS.md
+includes verbatim. Analytic terms are recomputed live (the model improved
+after the first sweep; artifact numbers stay as recorded)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs
+from repro.core import analytic, costmodel, hal
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "reports")
+
+
+def one_sentence_lever(dom: str, cfg, shape) -> str:
+    if dom == "compute":
+        return ("already compute-bound; next: cut overcompute (causal-block "
+                "skip, MoE capacity) or grow per-chip batch")
+    if dom == "memory":
+        if shape.kind == "decode":
+            return ("stream weights compressed (int4 palette kernel, 4x "
+                    "fewer HBM bytes) and context-shard the KV cache")
+        return "sequence-shard residuals (SP) and stream weights compressed"
+    return ("overlap or shrink collectives: EP+SP fusion, bf16/int8 wire "
+            "dtypes, replicated small embeddings")
+
+
+def load(dirname: str) -> dict:
+    out = {}
+    for p in sorted(glob.glob(os.path.join(BASE, dirname, "*.json"))):
+        d = json.load(open(p))
+        tag = os.path.basename(p)[:-5]
+        if d.get("overrides"):
+            continue
+        if "__" in tag and len(tag.split("__")) > 3:
+            continue  # hillclimb variants live in §Perf, not the table
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def main() -> None:
+    base = load("dryrun")
+    opt = load("dryrun2")
+    lines: list[str] = []
+    v5e = hal.TPU_V5E
+
+    lines.append("### Dry-run + roofline table (single-pod 16x16 = 256 chips; "
+                 "multi-pod 2x16x16 = 512 chips)\n")
+    lines.append("Terms in seconds per step (analytic, recomputed with the "
+                 "final cost model); `mem` = per-chip peak from "
+                 "`memory_analysis()` of the compiled artifact "
+                 "(baseline sweep -> optimized-defaults sweep).\n")
+    lines.append("| arch | shape | mesh | compute_s | memory_s | collective_s "
+                 "| dominant | MODEL/HLO flops | mem GB (base->opt) | "
+                 "roofline fraction | lever |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get_config(arch)
+        for shape_name in configs.SHAPES:
+            shape = configs.SHAPES[shape_name]
+            for mesh in ("pod", "multipod"):
+                key = (arch, shape_name, mesh)
+                d = base.get(key)
+                if d is None:
+                    continue
+                if d["status"] == "SKIP":
+                    lines.append(f"| {arch} | {shape_name} | {mesh} | — | — | "
+                                 f"— | SKIP | — | — | — | "
+                                 f"principled skip: full-attention arch at "
+                                 f"512k context |")
+                    continue
+                terms = analytic.analyze_cell(cfg, shape,
+                                              analytic.mesh_of(mesh))
+                sec = terms.seconds(v5e)
+                dom = terms.dominant(v5e)
+                # conservative (no-overlap) roofline fraction: useful compute
+                # time over the SUM of the three terms
+                step = sum(sec.values())
+                useful = ((costmodel.model_flops(cfg, shape)
+                           + costmodel.attention_flops(cfg, shape))
+                          / analytic.mesh_of(mesh).chips / v5e.peak_flops)
+                frac = useful / step if step else 0.0
+                mem_b = d["roofline"]["peak_mem_gb"]
+                d2 = opt.get(key)
+                mem_o = d2["roofline"]["peak_mem_gb"] if d2 and d2["status"] == "OK" else None
+                memtxt = f"{mem_b:.1f}->{mem_o:.1f}" if mem_o is not None else f"{mem_b:.1f}"
+                ratio = d["roofline"]["useful_ratio"]
+                lines.append(
+                    f"| {arch} | {shape_name} | {mesh} | {sec['compute_s']:.4f} "
+                    f"| {sec['memory_s']:.4f} | {sec['collective_s']:.4f} "
+                    f"| {dom} | {ratio:.1f}x (loop-once) | {memtxt} "
+                    f"| {min(frac, 1.0):.2f} "
+                    f"| {one_sentence_lever(dom, cfg, shape)} |")
+
+    # dominant-term census
+    lines.append("")
+    doms = {"compute": 0, "memory": 0, "collective": 0}
+    n_ok = n_skip = 0
+    for (arch, s, m), d in base.items():
+        if d["status"] == "SKIP":
+            n_skip += 1
+            continue
+        n_ok += 1
+        cfg = configs.get_config(arch)
+        t = analytic.analyze_cell(cfg, configs.SHAPES[s], analytic.mesh_of(m))
+        doms[t.dominant(v5e)] += 1
+    lines.append(f"**Census**: {n_ok} compiled cells + {n_skip} principled "
+                 f"skips; dominant terms — compute {doms['compute']}, "
+                 f"memory {doms['memory']}, collective {doms['collective']}.\n")
+
+    path = os.path.join(BASE, "tables.md")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path} ({len(lines)} lines)")
+
+
+if __name__ == "__main__":
+    main()

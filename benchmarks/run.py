@@ -1,0 +1,355 @@
+"""Benchmark harness: one function per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run            # all tables
+    PYTHONPATH=src python -m benchmarks.run --only t3_1,t9_2
+
+Output: `name,us_per_call,derived` CSV rows on stdout ('#' lines are
+commentary). `us_per_call` is a wall measurement on THIS host (CPU) where
+one exists, else empty; `derived` is the paper-comparable number (model
+value, ratio, or reproduction) with its meaning in the name.
+
+Evidence marks (DESIGN.md §7): rows are measured (host wall time), derived
+(computed from compiled artifacts or the oracle), or modeled (roofline /
+energy model for a target we cannot run). Host CPU wall-times are never
+presented as TPU/ANE performance — the *shape* of each curve is the
+reproduction target (e.g. fusion amortization flatness), not its scale.
+
+Everything also lands in reports/bench.json for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (analytic, capability, compression as cp, costmodel,
+                        dispatch, hal, numerics as nu, roofline,
+                        segmenter as sg)
+from repro import configs
+
+REPORT = {}
+ROWS = []
+
+
+def row(name: str, us_per_call: float | None, derived):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{'' if us_per_call is None else f'{us_per_call:.2f}'},{derived}")
+
+
+def _time(fn, n=50, warmup=3) -> float:
+    """Median-of-3 wall time per call, in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    outs = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = fn()
+        jax.block_until_ready(out)
+        outs.append((time.perf_counter() - t0) / n * 1e6)
+    return float(np.median(outs))
+
+
+# ---------------------------------------------------------------------------
+def t2_3_dispatch_budget():
+    """Table 2.3 / §9.3: the per-dispatch floor and its stage split.
+
+    The paper isolates ~0.23 ms on the M1 (98% dispatch overhead). We
+    isolate this host's jit dispatch floor the same way: a tiny op in a hot
+    loop, then split python-dispatch vs AOT-call overhead."""
+    print("# Table 2.3 — per-dispatch budget (host-measured analog)")
+    stats = dispatch.measure_dispatch_floor(n=300)
+    row("t2_3.per_call_floor", stats["per_call_s"] * 1e6, "measured")
+    row("t2_3.aot_call_floor", stats["aot_call_s"] * 1e6, "measured")
+    row("t2_3.python_overhead", stats["python_overhead_s"] * 1e6, "measured")
+    # paper's claim to reproduce: tiny-op wall time is overhead-dominated
+    x = jnp.ones((8, 8))
+    f_tiny = jax.jit(lambda a: (a * 1.0).sum()).lower(x).compile()
+    t_tiny = _time(lambda: f_tiny(x))
+    big = jnp.ones((512, 512))
+    f_big = jax.jit(lambda a: a @ a).lower(big).compile()
+    t_big = _time(lambda: f_big(big), n=20)
+    row("t2_3.overhead_fraction_tiny_op",
+        t_tiny, f"derived:{min(0.999, stats['aot_call_s']*1e6/max(t_tiny,1e-9)):.2f}")
+    row("t2_3.big_op_over_floor_ratio", t_big, f"derived:{t_big/max(t_tiny,1e-9):.1f}x")
+    REPORT["t2_3"] = {**stats, "tiny_us": t_tiny, "big_us": t_big}
+
+
+def t3_1_survivor_sweep():
+    """Table 3.1: the cancellation-threshold survivor sweep."""
+    print("# Table 3.1 — survivor sweep (oracle reproduction; paper M1 measured)")
+    mags = [1024, 3000, 4090, 4096, 8000, 16000, 30000]
+    paper = [16, 16, 16, 4, 4, 4, 4]
+    ours = {tie: nu.survivor_sweep(mags, tie=tie) for tie in ("even", "away")}
+    for m, p, e, a in zip(mags, paper, ours["even"], ours["away"]):
+        row(f"t3_1.survivors@{m}", None, f"paper:{p} ours_even:{e} ours_away:{a}")
+    floor_ok = all(v == 4 for v in ours["even"][3:]) and all(v == 4 for v in ours["away"][3:])
+    row("t3_1.hard_floor_of_4_at_4096+", None, f"derived:{'REPRODUCED' if floor_ok else 'MISS'}")
+    ws = nu.wide_reduce(np.array([4096.0] + [1.0] * 1024))
+    row("t3_1.worked_sum_4096+1024ones", None,
+        f"paper:5116 ours:{ws:.0f} naive_fp16:4096 exact:5120")
+    REPORT["t3_1"] = {"mags": mags, "paper": paper, **ours, "worked_sum": ws}
+
+
+def t3_3_numeric_constants():
+    """Table 3.3: fp16 numeric constants + activation-table errors."""
+    print("# Table 3.3 — numeric constants (oracle vs paper)")
+    checks = [
+        ("fp16_max", 65504.0, hal.FP16_MAX),
+        ("mac_output_ceiling", 32768.0, hal.ACCUM_OUT_CEILING),
+        ("width_slice_gain", 16.0, hal.WIDTH_SLICE_GAIN),
+        ("width_slice_finite_fill", 4094.0, hal.WIDTH_SLICE_FINITE_FILL),
+        ("exp_overflow_input", 11.094, hal.EXP_OVERFLOW_INPUT),
+        ("lut_knots", 33, hal.LUT_KNOTS),
+    ]
+    for name, paper, ours in checks:
+        row(f"t3_3.{name}", None, f"paper:{paper} ours:{ours}")
+    for name, bound in [("sigmoid", 0.0034), ("tanh", 0.0017), ("gelu", 0.0059)]:
+        err = nu.lut_worst_error(nu.build_lut(name))
+        row(f"t3_3.lut_{name}_worst_err", None,
+            f"paper:{bound} ours:{err:.5f} ({'OK' if err <= bound else 'OVER'})")
+    REPORT["t3_3"] = "see rows"
+
+
+def t7_1_compression_streams():
+    """Tables 7.1/7.4: stream-vs-fold per form per generation + speedups."""
+    print("# Table 7.1/7.4 — compressed-weight streaming (gates + byte ratios)")
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(4096, 1024)).astype(np.float32)
+    # Calibration: one measured anchor — the paper's int4 2.37x on the M1 —
+    # fixes the activation-byte share of its conv-stack probe at ~0.30x the
+    # dense weight bytes ((D+a)/(D/4+a)=2.37 -> a=0.2975D). The model then
+    # PREDICTS the other formats' speedups; comparing those predictions to
+    # their independent measurements is the reproduction.
+    act = 0.2975 * (w.size * 2.0)
+    paper_speedup = {("int4_palette", "ane-m1"): 2.37,
+                     ("sparse", "ane-m1"): 1.6,
+                     ("int8", "ane-m1"): 1.0,
+                     ("int8", "ane-m2"): 1.0 / 0.52}
+    for form in (hal.WeightForm.INT4_PALETTE, hal.WeightForm.SPARSE,
+                 hal.WeightForm.INT8, hal.WeightForm.BLOCKWISE):
+        p = cp.encode(form, w)
+        for target in (hal.ANE_M1, hal.ANE_M2, hal.ANE_M5, hal.TPU_V5E):
+            streams = target.streams(form)
+            sp = cp.stream_speedup(p, target, act_bytes=act)
+            key = (form.value, target.name)
+            ref = f" paper:{paper_speedup[key]:.2f}" if key in paper_speedup else ""
+            row(f"t7_1.{form.value}.{target.name}", None,
+                f"{'stream' if streams else 'fold'} predicted_speedup:{sp:.2f}{ref}")
+    REPORT["t7_1"] = "see rows"
+
+
+def t7_3_kernel_streaming():
+    """The TPU transcription: in-kernel dequant bytes; correctness is covered
+    in tests — here, the HBM byte ratios of the real packed layers."""
+    print("# Table 7.3 — kernel-level streaming byte ratios (derived)")
+    from repro.kernels.palette.ops import PaletteLinear
+    from repro.kernels.sparse.ops import SparseLinear
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(1024, 512)).astype(np.float32)
+    pal = PaletteLinear.pack(w)
+    spr = SparseLinear.pack(w)
+    row("t7_3.palette_hbm_ratio", None,
+        f"derived:{pal.dense_bytes()/pal.hbm_bytes():.2f}x fewer bytes")
+    row("t7_3.sparse_hbm_ratio", None,
+        f"derived:{spr.dense_bytes()/spr.hbm_bytes():.2f}x fewer bytes")
+    # wall time in interpret mode is NOT kernel perf; reported as the
+    # correctness-path cost only
+    x = jnp.asarray(rng.normal(size=(16, 1024)), jnp.float32)
+    t_pal = _time(lambda: pal(x), n=5)
+    row("t7_3.palette_interpret_wall", t_pal, "measured(interpret-only)")
+    REPORT["t7_3"] = {"palette_ratio": pal.dense_bytes() / pal.hbm_bytes()}
+
+
+def t9_2_roofline_constants():
+    """Table 9.2: the roofline constants + R(I) curve + working-set rule."""
+    print("# Table 9.2 — roofline constants (M1 paper values vs our HAL; v5e target)")
+    m1, v5e = hal.ANE_M1, hal.TPU_V5E
+    row("t9_2.m1_ridge", None, f"paper:141 ours:{m1.ridge_flop_per_byte:.0f} FLOP/B")
+    row("t9_2.m1_peak", None, f"paper:12e12 ours:{m1.peak_flops:.0e}")
+    row("t9_2.m1_bw", None, f"paper:85e9 ours:{m1.hbm_bandwidth:.0e}")
+    row("t9_2.m1_dispatch_floor", None, f"paper:0.23ms ours:{m1.dispatch_floor_s*1e3}ms")
+    row("t9_2.v5e_ridge", None, f"derived:{v5e.ridge_flop_per_byte:.0f} FLOP/B")
+    # R(I) curve: bandwidth-bound below ridge, compute roof above
+    for inten in (10, 50, 141, 500, 2000):
+        r = roofline.attainable_rate(float(inten), m1)
+        row(f"t9_2.R(I={inten})", None, f"modeled:{r:.2e} FLOP/s")
+    # conv 3x3 @256ch intensity (paper: 466 FLOP/B, compute-bound)
+    flops = 2 * 256 * 256 * 3 * 3 * 32 * 32
+    byts = (256 * 32 * 32 * 2) * 2 + 3 * 3 * 256 * 256 * 2
+    row("t9_2.conv3x3_256ch_intensity", None,
+        f"paper:466 ours:{flops/byts:.0f} FLOP/B (compute-bound: "
+        f"{flops/byts > m1.ridge_flop_per_byte})")
+    REPORT["t9_2"] = "see rows"
+
+
+def t9_4_fusion_amortization():
+    """§9.4: fused chains hold per-call latency ~flat 1->32 layers; batching
+    amortizes the floor per sample. Reproduced with real wall times here."""
+    print("# §9.4 — fusion economics (host-measured shape reproduction)")
+    x = jnp.ones((64, 64))
+    w = jnp.ones((64, 64)) * 0.01
+    per_call = {}
+    for depth in (1, 4, 16, 32):
+        def chain(a, w=w, depth=depth):
+            def body(a, _):
+                return jnp.tanh(a @ w), None
+            out, _ = jax.lax.scan(body, a, None, length=depth)
+            return out
+        f = jax.jit(chain).lower(x).compile()
+        t = _time(lambda f=f: f(x), n=30)
+        per_call[depth] = t
+        row(f"t9_4.fused_chain_depth{depth}", t,
+            f"derived:per_op={t/depth:.1f}us")
+    flatness = per_call[32] / per_call[1]
+    row("t9_4.call_time_ratio_32_vs_1", None,
+        f"derived:{flatness:.2f}x (paper: ~flat at the floor)")
+    # unfused: one dispatch per layer
+    f1 = jax.jit(lambda a: jnp.tanh(a @ w)).lower(x).compile()
+    t1 = _time(lambda: f1(x), n=30)
+    unfused32 = 32 * t1
+    row("t9_4.unfused_32_dispatches", unfused32,
+        f"derived:fusion_gain={unfused32/per_call[32]:.1f}x")
+    # batch amortization (paper: 512 samples -> ~127x per-sample reduction)
+    base = None
+    for batch in (1, 64, 512):
+        xb = jnp.ones((batch, 64))
+        fb = jax.jit(lambda a: jnp.tanh(a @ w)).lower(xb).compile()
+        t = _time(lambda fb=fb, xb=xb: fb(xb), n=30)
+        per_sample = t / batch
+        if base is None:
+            base = per_sample
+            row(f"t9_4.batch{batch}_per_sample", per_sample, "baseline")
+        else:
+            row(f"t9_4.batch{batch}_per_sample", per_sample,
+                f"derived:amortization={base/per_sample:.1f}x")
+    REPORT["t9_4"] = per_call
+
+
+def t10_4_energy_per_format():
+    """Table 10.4: energy per inference across weight formats (modeled).
+
+    The paper: latency falls faster than power rises, so narrower streams
+    cut energy/inference (int8 0.59x, int4 0.41x, sparse 0.57x vs fp16)."""
+    print("# Table 10.4 — compression as an energy control (roofline+power model)")
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(4096, 4096)).astype(np.float32)
+    act = 16 * 2 * 4096 * 2.0
+    flops = 2 * 16 * 4096 * 4096
+    paper_ratio = {"fp16": 1.0, "int8": 0.59, "int4_palette": 0.41,
+                   "sparse": 0.57}
+    m2 = hal.ANE_M2
+    e_fp16 = None
+    for form in (hal.WeightForm.FP16, hal.WeightForm.INT8,
+                 hal.WeightForm.INT4_PALETTE, hal.WeightForm.SPARSE):
+        p = cp.encode(form, w)
+        byts = cp.dram_bytes(p, m2) + act
+        t, _ = roofline.dispatch_time(flops, byts, m2)
+        e = roofline.energy_joules(flops, t, m2)
+        if e_fp16 is None:
+            e_fp16 = e
+        row(f"t10_4.energy_{form.value}", None,
+            f"modeled:{e/e_fp16:.2f}x paper:{paper_ratio[form.value]:.2f}x")
+    REPORT["t10_4"] = "see rows"
+
+
+def ta_capability_census():
+    """Appendix A: the operation-by-device matrix (attested vs reachable)."""
+    print("# Appendix A — capability census")
+    for target in (hal.ANE_M1, hal.ANE_M2, hal.ANE_M3, hal.ANE_M5):
+        rows_ = capability.attested_vs_reachable(target)
+        attested = sum(1 for _, a, _r in rows_ if a)
+        reachable = sum(1 for _, _a, r in rows_ if r)
+        row(f"tA.{target.name}", None,
+            f"attested:{attested} reachable:{reachable} gap:{attested-reachable}")
+    # live compile-and-run on the actual backend
+    native = sum(capability.confirm_op(op, hal.TPU_V5E).reachable
+                 for op in ("matmul", "conv2d", "softmax", "gather",
+                            "scatter", "reduce_prod", "cumsum"))
+    row("tA.xla_backend_confirmed", None, f"measured:{native}/7 native")
+    REPORT["tA"] = "see rows"
+
+
+def t5_3_segmenter():
+    """§5.3: cost-driven placement — solution quality + the long-segment
+    property, on real per-arch op graphs."""
+    print("# §5.3 — placement segmenter")
+    for arch in ("tinyllama-1.1b", "deepseek-v3-671b", "mamba2-1.3b"):
+        cfg = configs.get_config(arch)
+        ops = costmodel.op_graph(cfg, configs.SHAPES["decode_32k"])
+        p = sg.place(ops, sg.ANE_BACKENDS)
+        all_ane = sum(sg.ANE_BACKENDS[0].op_cost(o) for o in ops) + 0.23e-3
+        row(f"t5_3.{arch}", None,
+            f"derived:segments={len(p.segments)} cost={p.cost*1e3:.2f}ms "
+            f"all_engine={all_ane*1e3:.2f}ms")
+    REPORT["t5_3"] = "see rows"
+
+
+def roofline_cells_summary():
+    """§Roofline: the per-(arch x shape x mesh) three-term table, read from
+    the dry-run artifacts."""
+    print("# §Roofline — per-cell dominant terms (from reports/dryrun)")
+    import glob
+    base = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+    cells = sorted(glob.glob(os.path.join(base, "*.json")))
+    if not cells:
+        row("cells.none", None, "run `python -m repro.launch.dryrun --all` first")
+        return
+    doms = {"compute": 0, "memory": 0, "collective": 0}
+    n_ok = n_skip = 0
+    for path in cells:
+        tag = os.path.basename(path)[:-5]
+        if len(tag.split("__")) > 3:
+            continue  # hillclimb variants live in §Perf, not the census
+        d = json.load(open(path))
+        if d.get("status") == "SKIP":
+            n_skip += 1
+            continue
+        if d.get("status") != "OK" or "analytic" not in d or d.get("overrides"):
+            continue
+        n_ok += 1
+        doms[d["analytic"]["dominant"]] += 1
+    row("cells.counts", None, f"derived:ok={n_ok} principled_skips={n_skip}")
+    row("cells.dominant_split", None,
+        f"derived:compute={doms['compute']} memory={doms['memory']} "
+        f"collective={doms['collective']}")
+    REPORT["cells"] = doms
+
+
+TABLES = {
+    "t2_3": t2_3_dispatch_budget,
+    "t3_1": t3_1_survivor_sweep,
+    "t3_3": t3_3_numeric_constants,
+    "t5_3": t5_3_segmenter,
+    "t7_1": t7_1_compression_streams,
+    "t7_3": t7_3_kernel_streaming,
+    "t9_2": t9_2_roofline_constants,
+    "t9_4": t9_4_fusion_amortization,
+    "t10_4": t10_4_energy_per_format,
+    "tA": ta_capability_census,
+    "cells": roofline_cells_summary,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(TABLES)
+    print("name,us_per_call,derived")
+    for name in names:
+        TABLES[name]()
+    outdir = os.path.join(os.path.dirname(__file__), "..", "reports")
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, "bench.json"), "w") as f:
+        json.dump({"rows": [(n, u, str(d)) for n, u, d in ROWS]}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end training driver example.
+
+Default: a ~10M-parameter llama-family model for 200 steps on CPU (minutes).
+`--preset 100m` selects the ~100M configuration for real hardware (same
+code path; a v5e slice trains it in seconds per hundred steps).
+
+    PYTHONPATH=src python examples/train_lm.py
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+Everything the production path has is on: checkpointing + resume, the
+deterministic pipeline, supervisor restarts, cosine schedule, grad clipping.
+"""
+
+import argparse
+import dataclasses
+import sys
+
+from repro import configs
+from repro.configs.base import ModelConfig
+from repro.launch import train
+
+
+PRESETS = {
+    # ~10M: CPU-friendly demonstration
+    "10m": ModelConfig(name="demo-10m", family="dense", n_layers=4,
+                       d_model=256, n_heads=8, n_kv_heads=4, d_head=32,
+                       d_ff=768, vocab=8192, dtype="float32"),
+    # ~100M: the deliverable-scale config (run on real hardware)
+    "100m": ModelConfig(name="demo-100m", family="dense", n_layers=10,
+                        d_model=640, n_heads=10, n_kv_heads=5, d_head=64,
+                        d_ff=2560, vocab=32000, dtype="float32"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="10m", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/anevm_train_demo")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    from repro.core import costmodel
+    print(f"preset {args.preset}: {costmodel.param_count(cfg)/1e6:.1f}M params")
+
+    # monkey-patch the registry so the standard driver sees this config
+    import repro.configs as cfgs
+    mod = type(sys)("demo")
+    mod.CONFIG = cfg
+    cfgs._MODULES[cfg.name] = mod
+    cfgs.ARCH_NAMES.append(cfg.name)
+
+    out = train.run(["--arch", cfg.name, "--steps", str(args.steps),
+                     "--batch", str(args.batch), "--seq", str(args.seq),
+                     "--lr", "1e-3", "--ckpt-dir", args.ckpt_dir,
+                     "--ckpt-every", "50", "--log-every", "20",
+                     "--mesh", "none"])
+    print(f"final loss {out['final_loss']:.4f} after {out['final_step']} steps "
+          f"(checkpoints in {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

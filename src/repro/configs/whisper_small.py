@@ -1,0 +1,15 @@
+"""whisper-small [audio]: enc-dec, conv frontend STUB [arXiv:2212.04356].
+
+Per assignment the modality frontend is a stub: `input_specs()` provides
+precomputed frame embeddings (B, 1500, d_model); the transformer backbone
+(12L encoder + 12L decoder with cross-attention) is what we build.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="encdec",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_head=64,
+    d_ff=3072, vocab=51865,
+    norm="layernorm", act="gelu_mlp", use_bias=True,
+    n_encoder_layers=12, encoder_len=1500,
+)

@@ -1,0 +1,17 @@
+"""repro.core — the paper's contribution as a composable library.
+
+C1 roofline (`roofline`), C2 numerics oracle (`numerics`), C3 dispatch model
+(`dispatch`), C4 weight compression (`compression`), C5 placement segmenter
+(`segmenter`), C6 capability validator (`capability`), plus the per-target
+HAL tables (`hal`) and the analytic cost model (`costmodel`).
+"""
+from repro.core import (  # noqa: F401
+    capability,
+    compression,
+    costmodel,
+    dispatch,
+    hal,
+    numerics,
+    roofline,
+    segmenter,
+)

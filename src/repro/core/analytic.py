@@ -1,0 +1,171 @@
+"""Analytic per-step roofline terms for one (arch x shape x mesh) cell.
+
+Why this exists alongside the compiled-artifact numbers: XLA's
+`cost_analysis()` counts a while-loop body ONCE, so any scanned-layer model
+under-reports FLOPs/bytes by ~n_layers and in-loop collectives likewise
+(documented in EXPERIMENTS.md §Dry-run). The dry-run therefore records both:
+the raw artifact numbers (ground truth for *structure*: which collectives,
+does memory fit) and these analytic numbers (ground truth for *magnitude*),
+cross-checked against each other in tests on unscanned single-layer programs
+where the two must agree.
+
+This module is also the §Perf napkin-math engine: every hillclimb hypothesis
+("sequence-parallel residuals cut the memory term by X", "int4 streaming
+cuts decode weight bytes 4x") is priced here before it is implemented.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import costmodel, hal
+from repro.core.hal import Target
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshShape:
+    pod: int
+    data: int
+    model: int
+
+    @property
+    def chips(self) -> int:
+        return self.pod * self.data * self.model
+
+    @property
+    def dp(self) -> int:
+        return self.pod * self.data
+
+
+POD = MeshShape(1, 16, 16)
+MULTIPOD = MeshShape(2, 16, 16)
+
+
+@dataclasses.dataclass
+class AnalyticTerms:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    # breakdown for the perf loop
+    detail: dict
+
+    def seconds(self, target: Target) -> dict:
+        return {
+            "compute_s": self.flops_per_chip / target.peak_flops,
+            "memory_s": self.hbm_bytes_per_chip / target.hbm_bandwidth,
+            "collective_s": self.coll_bytes_per_chip / target.collective_bandwidth,
+        }
+
+    def dominant(self, target: Target) -> str:
+        s = self.seconds(target)
+        return max(s, key=s.get).replace("_s", "")
+
+
+def _ring(n: int) -> float:
+    """Ring-collective byte multiplier: 2(n-1)/n for all-reduce."""
+    return 2.0 * (n - 1) / n if n > 1 else 0.0
+
+
+def analyze_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: MeshShape,
+    *,
+    target: Target = hal.TPU_V5E,
+    weight_stream_bytes_per_param: float = 2.0,   # int4 streaming -> 0.5
+    seq_parallel_residuals: bool = False,         # SP hillclimb lever
+    remat: str = "full",
+) -> AnalyticTerms:
+    p_total = costmodel.param_count(cfg)
+    p_active = costmodel.active_param_count(cfg)
+    d, l, v = cfg.d_model, cfg.n_layers, cfg.padded_vocab
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    tokens_loc = tokens / mesh.dp
+    p_shard = p_total / mesh.model                # TP/EP-sharded, DP-replicated
+    bpe = weight_stream_bytes_per_param
+
+    # ---------------- FLOPs ----------------
+    mf = costmodel.model_flops(cfg, shape) + costmodel.attention_flops(cfg, shape)
+    flops_per_chip = mf / mesh.chips
+
+    # ---------------- HBM bytes ----------------
+    detail: dict = {}
+    if shape.kind == "train":
+        w_traffic = p_shard * 2.0 * 3.0           # fwd read, bwd read, grad write
+        opt_traffic = (p_shard / max(mesh.dp, 1)) * 20.0 if True else 0.0
+        resid_dtype = 2.0
+        resid_shard = mesh.model if seq_parallel_residuals else 1
+        act_traffic = (l * tokens_loc * d * resid_dtype * 3.0) / resid_shard
+        logits_traffic = tokens_loc * (v / mesh.model) * 4.0 * 2.0
+        hbm = w_traffic + opt_traffic + act_traffic + logits_traffic
+        detail.update(weights=w_traffic, optimizer=opt_traffic,
+                      activations=act_traffic, logits=logits_traffic)
+    # how many model-axis ways the KV cache actually shards: by KV heads
+    # when divisible, by sequence under context-parallel decode, else not
+    kv_div = cfg.n_kv_heads > 0 and not cfg.use_mla \
+        and cfg.n_kv_heads % mesh.model == 0
+    cache_model_shards = mesh.model if (kv_div or cfg.shard_cache_seq) else 1
+    if shape.kind == "prefill":
+        w_traffic = p_shard * bpe
+        act_traffic = l * tokens_loc * d * 2.0 * 2.0
+        cache_traffic = (costmodel.kv_cache_bytes(cfg, shape)
+                         / (mesh.dp * cache_model_shards))
+        logits_traffic = shape.global_batch / mesh.dp * (v / mesh.model) * 4.0
+        hbm = w_traffic + act_traffic + cache_traffic + logits_traffic
+        detail.update(weights=w_traffic, activations=act_traffic,
+                      cache=cache_traffic, logits=logits_traffic,
+                      cache_model_shards=cache_model_shards)
+    elif shape.kind == "decode":  # one token/seq — weight + cache streaming
+        p_active_shard = p_active / mesh.model
+        w_traffic = p_active_shard * bpe
+        cache_traffic = (costmodel.kv_cache_bytes(cfg, shape)
+                         / (mesh.dp * cache_model_shards))
+        act_traffic = l * tokens_loc * d * 2.0 * 4.0
+        logits_traffic = tokens_loc * (v / mesh.model) * 4.0
+        hbm = w_traffic + cache_traffic + act_traffic + logits_traffic
+        detail.update(weights=w_traffic, cache=cache_traffic,
+                      activations=act_traffic, logits=logits_traffic,
+                      cache_model_shards=cache_model_shards)
+
+    # ---------------- collective bytes ----------------
+    coll = 0.0
+    n_attn_tp = sum(1 for i in range(cfg.n_layers)
+                    if cfg.block_kind(i) in ("attn", "rglru", "ssm"))
+    if shape.kind == "train":
+        # DP gradient reduction (ring over pod*data), bf16 grads
+        coll_dp = _ring(mesh.dp) * p_shard * 2.0
+        # TP: 2 partial-sum all-reduces per layer on the activation block
+        coll_tp = (2.0 * l * tokens_loc * d * 2.0 * _ring(mesh.model) / 2.0
+                   if mesh.model > 1 else 0.0)
+        coll_ep = 0.0
+        if cfg.n_experts:
+            n_moe = sum(1 for i in range(cfg.n_layers) if cfg.layer_is_moe(i))
+            per_layer = (tokens_loc / mesh.model) * cfg.experts_per_token * d * 2.0
+            # fwd: 2 a2a + 1 output all-gather; bwd mirrors it. The EP+SP
+            # fusion (seq-sharded residuals) removes the all-gather entirely.
+            gather = 0.0 if seq_parallel_residuals else tokens_loc * d * 2.0
+            coll_ep = n_moe * (2 * per_layer * cfg.moe_capacity_factor
+                               + gather) * 2.0
+        coll = coll_dp + coll_tp + coll_ep
+        detail.update(coll_dp=coll_dp, coll_tp=coll_tp, coll_ep=coll_ep)
+    else:
+        coll_tp = (2.0 * l * tokens_loc * d * 2.0 * _ring(mesh.model) / 2.0
+                   if mesh.model > 1 else 0.0)
+        coll_ep = 0.0
+        if cfg.n_experts and shape.kind == "prefill":
+            n_moe = sum(1 for i in range(cfg.n_layers) if cfg.layer_is_moe(i))
+            per_layer = (tokens_loc / mesh.model) * cfg.experts_per_token * d * 2.0
+            coll_ep = n_moe * (2 * per_layer * cfg.moe_capacity_factor
+                               + tokens_loc * d * 2.0)
+        coll = coll_tp + coll_ep
+        detail.update(coll_tp=coll_tp, coll_ep=coll_ep)
+
+    return AnalyticTerms(flops_per_chip=flops_per_chip,
+                         hbm_bytes_per_chip=hbm,
+                         coll_bytes_per_chip=coll,
+                         detail=detail)
+
+
+def mesh_of(kind: str) -> MeshShape:
+    return MULTIPOD if kind == "multipod" else POD

@@ -1,0 +1,152 @@
+"""Attested vs reachable: the compile-and-run capability validator (paper §4).
+
+The paper's rule: "a capability advertised in a table, recognized by a
+frontend, or validated by a checker is a claim about one layer; only a
+compile-and-run on the target confirms the operation at the layer that
+executes it." Three-dimensional convolution carries a capability byte on every
+ANE family yet fails backend lowering everywhere — attested, not reachable.
+
+`confirm_op` is the paper's listing 4.2 carried over to XLA: build the
+smallest legal graph containing only the op under test, lower+compile it
+against the target, and report NATIVE or REJECTED(layer, message). The
+40-cell dry-run is this same check applied to whole (arch x shape x mesh)
+programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hal
+from repro.core.hal import Target
+
+
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    op: str
+    target: str
+    status: str            # "NATIVE" | "REJECTED"
+    layer: str             # which layer refused: "frontend" | "lowering" | "execute" | ""
+    message: str = ""
+
+    @property
+    def reachable(self) -> bool:
+        return self.status == "NATIVE"
+
+
+def _one_op_graph(op: str) -> tuple[Callable, tuple]:
+    """Smallest legal single-op graph + dummy args (paper listing 4.2)."""
+    x = jnp.ones((4, 8), jnp.float32)
+    idx = jnp.array([0, 2, 1, 3], jnp.int32)
+    graphs: dict[str, tuple[Callable, tuple]] = {
+        "matmul": (lambda a: a @ a.T, (x,)),
+        "conv2d": (lambda a: jax.lax.conv_general_dilated(
+            a.reshape(1, 1, 4, 8), jnp.ones((1, 1, 3, 3), jnp.float32),
+            (1, 1), "SAME"), (x,)),
+        "conv3d": (lambda a: jax.lax.conv_general_dilated(
+            a.reshape(1, 1, 1, 4, 8), jnp.ones((1, 1, 1, 3, 3), jnp.float32),
+            (1, 1, 1), "SAME"), (x,)),
+        "softmax": (lambda a: jax.nn.softmax(a, axis=-1), (x,)),
+        "layer_norm": (lambda a: (a - a.mean(-1, keepdims=True))
+                       / (a.std(-1, keepdims=True) + 1e-5), (x,)),
+        "relu": (jax.nn.relu, (x,)),
+        "sigmoid": (jax.nn.sigmoid, (x,)),
+        "tanh": (jnp.tanh, (x,)),
+        "gelu": (jax.nn.gelu, (x,)),
+        "exp": (jnp.exp, (x,)),
+        "log": (lambda a: jnp.log(jnp.abs(a) + 1), (x,)),
+        "sin": (jnp.sin, (x,)),
+        "cos": (jnp.cos, (x,)),
+        "erf": (jax.scipy.special.erf, (x,)),
+        "reduce_prod": (lambda a: jnp.prod(a, axis=-1), (x,)),
+        "cumsum": (lambda a: jnp.cumsum(a, axis=-1), (x,)),
+        "scatter": (lambda a: a.at[idx].add(1.0), (x,)),
+        "gather": (lambda a: a[idx], (x,)),
+        "one_hot": (lambda a: jax.nn.one_hot(idx, 8), (x,)),
+        "transpose": (lambda a: a.T, (x,)),
+        "reshape": (lambda a: a.reshape(8, 4), (x,)),
+        "concat": (lambda a: jnp.concatenate([a, a], axis=0), (x,)),
+        "slice": (lambda a: a[:, 1:5], (x,)),
+        "pad": (lambda a: jnp.pad(a, ((1, 1), (2, 2))), (x,)),
+        "attention_fused": (lambda a: jax.nn.softmax(
+            (a @ a.T) / np.sqrt(8.0), axis=-1) @ a, (x,)),
+        "logical_and": (lambda a: jnp.logical_and(a > 0, a < 1), (x,)),
+        "mod": (lambda a: jnp.mod(a, 2.0), (x,)),
+        "non_zero": (lambda a: jnp.nonzero(a, size=8)[0], (x,)),
+        "sort": (lambda a: jnp.sort(a, axis=-1), (x,)),
+        "top_k": (lambda a: jax.lax.top_k(a, 2)[0], (x,)),
+        "argmax": (lambda a: jnp.argmax(a, axis=-1), (x,)),
+    }
+    if op not in graphs:
+        raise KeyError(f"no single-op probe graph for {op!r}")
+    return graphs[op]
+
+
+def confirm_op(op: str, target: Target, *, backend: str | None = None,
+               mesh: jax.sharding.Mesh | None = None) -> Verdict:
+    """Lower + compile (+ run when executable) the single-op graph.
+
+    For ANE targets the 'frontend' is the HAL op-floor emulation (we cannot
+    run Apple silicon here); for TPU/CPU targets the real XLA pipeline rules.
+    The point the census makes is the *method*: the verdict comes from the
+    layer that runs the work, never from the attestation bit.
+    """
+    if target.family == "ane":
+        # Emulated ANE pipeline: frontend accepts anything attested; backend
+        # lowering succeeds only for genuinely reachable ops (paper's split).
+        if not target.attests(op):
+            return Verdict(op, target.name, "REJECTED", "frontend",
+                           f"{op}: not in the {target.generation} op table")
+        if not target.reaches(op):
+            return Verdict(op, target.name, "REJECTED", "lowering",
+                           "Some ops are not supported on any of the "
+                           "specified backends")
+        return Verdict(op, target.name, "NATIVE", "")
+    # Real XLA path.
+    try:
+        fn, args = _one_op_graph(op)
+    except KeyError as e:
+        return Verdict(op, target.name, "REJECTED", "frontend", str(e))
+    try:
+        lowered = jax.jit(fn).lower(*args)
+    except Exception as e:  # noqa: BLE001 — the reject string IS the signal
+        return Verdict(op, target.name, "REJECTED", "frontend", repr(e)[:200])
+    try:
+        compiled = lowered.compile()
+    except Exception as e:  # noqa: BLE001
+        return Verdict(op, target.name, "REJECTED", "lowering", repr(e)[:200])
+    try:
+        out = compiled(*args)
+        jax.block_until_ready(out)
+    except Exception as e:  # noqa: BLE001
+        return Verdict(op, target.name, "REJECTED", "execute", repr(e)[:200])
+    return Verdict(op, target.name, "NATIVE", "")
+
+
+def census(target: Target, ops: list[str] | None = None) -> list[Verdict]:
+    """The operation-by-device matrix (paper Appendix A) for one target."""
+    if ops is None:
+        ops = sorted(set(target.op_floor) & set(_probe_ops()))
+    return [confirm_op(op, target) for op in ops]
+
+
+def _probe_ops() -> list[str]:
+    x = jnp.ones((4, 8), jnp.float32)  # noqa: F841 — keep import-side-effect free
+    return ["matmul", "conv2d", "conv3d", "softmax", "layer_norm", "relu",
+            "sigmoid", "tanh", "gelu", "exp", "log", "sin", "cos", "erf",
+            "reduce_prod", "cumsum", "scatter", "gather", "one_hot",
+            "transpose", "reshape", "concat", "slice", "pad",
+            "attention_fused", "logical_and", "mod", "non_zero"]
+
+
+def attested_vs_reachable(target: Target) -> list[tuple[str, bool, bool]]:
+    """(op, attested, reachable) triples — the gap is the paper's point."""
+    rows = []
+    for op in sorted(target.op_floor):
+        rows.append((op, target.attests(op), target.reaches(op)))
+    return rows

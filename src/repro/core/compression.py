@@ -1,0 +1,297 @@
+"""Weight compression: forms, stream-vs-fold gates, and the §7.6 chooser.
+
+The paper's result: compression on the direct route is a *bandwidth* feature.
+A form either **streams** (compressed bytes cross DRAM, dequantized at the
+multiplier input) or **folds** (expanded to dense fp16 in DRAM first — a
+stored-size saving only). Which outcome applies is a HAL decision per target
+(`hal.Target.streams`), not a property of the reconstruction op.
+
+Encode/decode here are the reference implementations; the Pallas kernels in
+`repro/kernels/{palette,sparse}` are the streaming datapath (dequant happens
+inside the kernel, after the HBM->VMEM move, so HBM traffic stays compressed —
+the TPU-native equivalent of the ANE's multiplier-input reconstruction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hal
+from repro.core.hal import Target, WeightForm
+
+# ---------------------------------------------------------------------------
+# Encoders / decoders (reference; pure jnp so they jit and differentiate-thru
+# via straight-through where needed)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PackedWeight:
+    """A weight in one of the compressed forms, plus its side tables."""
+
+    form: WeightForm
+    shape: tuple[int, ...]
+    payload: dict[str, Any]          # form-specific arrays
+
+    @property
+    def stored_bytes(self) -> int:
+        total = 0
+        for v in jax.tree.leaves(self.payload):
+            total += v.size * v.dtype.itemsize
+        return total
+
+    @property
+    def dense_bytes(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n * 2                  # fp16/bf16 dense reference
+
+
+def encode_int8(w: np.ndarray, per_channel: bool = True) -> PackedWeight:
+    """Affine int8, symmetric on the M1 generation: w = s*q, q=round(w/s).
+
+    paper:§7.2 — zero point folds to 0 on H13; scale is per output channel.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    axis = tuple(range(w.ndim - 1))
+    if per_channel:
+        s = np.max(np.abs(w), axis=axis, keepdims=True) / 127.0
+    else:
+        s = np.full((1,) * w.ndim, np.max(np.abs(w)) / 127.0)
+    s = np.maximum(s, 1e-12)
+    q = np.clip(np.round(w / s), -127, 127).astype(np.int8)
+    return PackedWeight(WeightForm.INT8, w.shape,
+                        {"q": q, "scale": s.astype(np.float16)})
+
+
+def decode_int8(p: PackedWeight) -> jnp.ndarray:
+    q = jnp.asarray(p.payload["q"], jnp.float32)
+    s = jnp.asarray(p.payload["scale"], jnp.float32)
+    return (q * s).astype(jnp.float16)
+
+
+def encode_int4_palette(w: np.ndarray, iters: int = 12) -> PackedWeight:
+    """int4 palette lookup table: 4-bit index into a 16-entry fp16 codebook,
+    two indices packed per byte, low nibble first (paper §7.2 worked example).
+
+    Codebook fit: k-means (Lloyd) per tensor, initialized at quantiles.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    flat = w.reshape(-1)
+    # init codebook at quantiles, then Lloyd iterations
+    qs = np.linspace(0, 1, 16)
+    code = np.quantile(flat, qs).astype(np.float32)
+    for _ in range(iters):
+        idx = np.argmin(np.abs(flat[:, None] - code[None, :]), axis=1)
+        for k in range(16):
+            sel = flat[idx == k]
+            if sel.size:
+                code[k] = sel.mean()
+    code = np.sort(code)
+    idx = np.argmin(np.abs(flat[:, None] - code[None, :]), axis=1).astype(np.uint8)
+    if idx.size % 2:
+        idx = np.concatenate([idx, np.zeros(1, np.uint8)])
+    packed = (idx[0::2] | (idx[1::2] << 4)).astype(np.uint8)   # low nibble first
+    return PackedWeight(WeightForm.INT4_PALETTE, w.shape,
+                        {"packed": packed, "lut": code.astype(np.float16)})
+
+
+def decode_int4_palette(p: PackedWeight) -> jnp.ndarray:
+    packed = jnp.asarray(p.payload["packed"])
+    lut = jnp.asarray(p.payload["lut"], jnp.float16)
+    lo = packed & 0xF
+    hi = packed >> 4
+    idx = jnp.stack([lo, hi], axis=1).reshape(-1)
+    n = int(np.prod(p.shape))
+    return lut[idx[:n]].reshape(p.shape)
+
+
+def encode_sparse(w: np.ndarray, target_density: float = 0.5) -> PackedWeight:
+    """Pair-structured sparsity (TPU adaptation of the paper's mask+values).
+
+    The ANE stores a 1-bit keep mask + packed fp16 nonzeros (paper §7.2). A
+    TPU kernel wants structure, so we keep exactly one of every two adjacent
+    elements along the contraction axis (50% structured, like GPU 2:4):
+    values (K/2, N) fp16 + selector bits packed 8-per-byte along K:
+    stored bytes = 0.5 + 1/16 ~ 0.53x dense (the paper's unstructured form
+    reaches 0.43x at 63% zeros — recorded in DESIGN.md). Magnitude-based:
+    the larger |.| of each pair survives.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    assert w.ndim == 2 and w.shape[0] % 2 == 0, "sparse form wants (K, N), K even"
+    k, n = w.shape
+    pairs = w.reshape(k // 2, 2, n)
+    sel = (np.abs(pairs[:, 1, :]) > np.abs(pairs[:, 0, :])).astype(np.uint8)
+    vals = np.where(sel, pairs[:, 1, :], pairs[:, 0, :]).astype(np.float16)
+    k2 = k // 2
+    pad = (-k2) % 8
+    sel_p = np.concatenate([sel, np.zeros((pad, n), np.uint8)]) if pad else sel
+    bits = sel_p.reshape(-1, 8, n)
+    weights_of_bit = (1 << np.arange(8, dtype=np.uint8))[None, :, None]
+    packed = (bits * weights_of_bit).sum(axis=1).astype(np.uint8)   # (k2/8, n)
+    return PackedWeight(WeightForm.SPARSE, w.shape,
+                        {"values": vals, "selector_packed": packed})
+
+
+def unpack_selector(packed: jnp.ndarray, k2: int) -> jnp.ndarray:
+    """(k2/8, N) uint8 -> (k2, N) 0/1 — shared with the Pallas kernel."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[:, None, :] >> shifts[None, :, None]) & 1
+    return bits.reshape(-1, packed.shape[-1])[:k2]
+
+
+def decode_sparse(p: PackedWeight) -> jnp.ndarray:
+    vals = jnp.asarray(p.payload["values"], jnp.float16)
+    k2, n = vals.shape
+    sel = unpack_selector(jnp.asarray(p.payload["selector_packed"]), k2)
+    out = jnp.zeros((k2, 2, n), jnp.float16)
+    out = out.at[:, 0, :].set(jnp.where(sel == 0, vals, 0))
+    out = out.at[:, 1, :].set(jnp.where(sel == 1, vals, 0))
+    return out.reshape(p.shape)
+
+
+def encode_blockwise(w: np.ndarray, block: int = 32) -> PackedWeight:
+    """Blockwise affine: one fp16 scale per contiguous block of `block`
+    elements along the contraction axis — finer than per-channel (paper §7.2).
+    """
+    w = np.asarray(w, dtype=np.float32)
+    assert w.ndim == 2 and w.shape[0] % block == 0
+    k, n = w.shape
+    blocks = w.reshape(k // block, block, n)
+    s = np.maximum(np.max(np.abs(blocks), axis=1, keepdims=True) / 127.0, 1e-12)
+    q = np.clip(np.round(blocks / s), -127, 127).astype(np.int8)
+    return PackedWeight(WeightForm.BLOCKWISE, w.shape,
+                        {"q": q.reshape(k, n), "scale": s.astype(np.float16),
+                         "block": np.asarray(block)})
+
+
+def decode_blockwise(p: PackedWeight) -> jnp.ndarray:
+    block = int(p.payload["block"])
+    k, n = p.shape
+    q = jnp.asarray(p.payload["q"], jnp.float32).reshape(k // block, block, n)
+    s = jnp.asarray(p.payload["scale"], jnp.float32)
+    return (q * s).reshape(p.shape).astype(jnp.float16)
+
+
+_ENCODERS = {
+    WeightForm.INT8: encode_int8,
+    WeightForm.INT4_PALETTE: encode_int4_palette,
+    WeightForm.SPARSE: encode_sparse,
+    WeightForm.BLOCKWISE: encode_blockwise,
+}
+_DECODERS = {
+    WeightForm.INT8: decode_int8,
+    WeightForm.INT4_PALETTE: decode_int4_palette,
+    WeightForm.SPARSE: decode_sparse,
+    WeightForm.BLOCKWISE: decode_blockwise,
+}
+
+
+def encode(form: WeightForm, w: np.ndarray) -> PackedWeight:
+    if form == WeightForm.FP16:
+        return PackedWeight(WeightForm.FP16, w.shape,
+                            {"w": np.asarray(w, np.float16)})
+    return _ENCODERS[form](w)
+
+
+def decode(p: PackedWeight) -> jnp.ndarray:
+    if p.form == WeightForm.FP16:
+        return jnp.asarray(p.payload["w"], jnp.float16)
+    return _DECODERS[p.form](p)
+
+
+# ---------------------------------------------------------------------------
+# Stream-vs-fold semantics + the §7.6 chooser
+# ---------------------------------------------------------------------------
+
+
+def dram_bytes(p: PackedWeight, target: Target) -> float:
+    """Bytes that cross the DRAM/HBM boundary per use of this weight.
+
+    A form that streams moves its stored (compressed) bytes; a form that
+    folds is expanded to dense fp16 in DRAM first and moves dense bytes
+    (paper §7.3: the int8 fold on M1 is a stored-size saving only).
+    """
+    if target.streams(p.form):
+        return float(p.stored_bytes)
+    return float(p.dense_bytes)
+
+
+def accuracy_error(form: WeightForm, w: np.ndarray,
+                   probe: np.ndarray | None = None) -> float:
+    """Relative output error of a linear layer with the round-tripped weight
+    against an fp32 reference (the paper's tolerance check)."""
+    w = np.asarray(w, dtype=np.float32)
+    if probe is None:
+        rng = np.random.default_rng(0)
+        probe = rng.normal(size=(16, w.shape[0])).astype(np.float32)
+    ref = probe @ w
+    wd = np.asarray(decode(encode(form, w)), dtype=np.float32)
+    out = probe @ wd
+    return float(np.linalg.norm(out - ref) / (np.linalg.norm(ref) + 1e-30))
+
+
+def is_bandwidth_bound(flops: float, weight_dense_bytes: float,
+                       act_bytes: float, target: Target) -> bool:
+    """Roofline classification of one layer (paper §9.1)."""
+    intensity = flops / max(weight_dense_bytes + act_bytes, 1.0)
+    return intensity < target.ridge_flop_per_byte
+
+
+def fraction_zero(w: np.ndarray, tol: float = 0.0) -> float:
+    w = np.asarray(w)
+    return float(np.mean(np.abs(w) <= tol))
+
+
+def choose_weight_form(
+    w: np.ndarray,
+    target: Target,
+    *,
+    flops: float,
+    act_bytes: float,
+    tolerance: float = 0.01,
+    sparsity_threshold: float = 0.5,
+) -> WeightForm:
+    """The paper's §7.6 procedure, verbatim in structure:
+
+    1. Keep fp16 if the layer is compute-bound (a stream cannot help).
+    2. Otherwise try the native-streaming forms smallest-bytes-first
+       (int4 -> sparse -> int8 -> blockwise), keeping the first that clears
+       the accuracy tolerance against an fp32 reference.
+    3. Sparsity is a candidate only when >= half the weight is zero.
+    4. A folding form is never chosen for bandwidth (it moves dense bytes).
+    """
+    w = np.asarray(w, dtype=np.float32)
+    dense_bytes = w.size * 2.0
+    if not is_bandwidth_bound(flops, dense_bytes, act_bytes, target):
+        return WeightForm.FP16
+    candidates = [f for f in (WeightForm.INT4_PALETTE, WeightForm.SPARSE,
+                              WeightForm.INT8, WeightForm.BLOCKWISE)
+                  if target.streams(f)]
+    if fraction_zero(w) < sparsity_threshold and WeightForm.SPARSE in candidates:
+        candidates.remove(WeightForm.SPARSE)
+    candidates.sort(key=lambda f: hal.BYTES_PER_ELEMENT[f])
+    for form in candidates:
+        if w.ndim != 2 and form in (WeightForm.SPARSE, WeightForm.BLOCKWISE):
+            continue
+        try:
+            if accuracy_error(form, w) <= tolerance:
+                return form
+        except AssertionError:
+            continue
+    return WeightForm.FP16
+
+
+def stream_speedup(p: PackedWeight, target: Target, act_bytes: float = 0.0) -> float:
+    """Predicted bandwidth-bound speedup of the compressed stream vs fp16:
+    dense_bytes / dram_bytes (per paper: int4 on M1 -> ~4x fewer weight bytes
+    -> measured 2.37x once activations and overhead are included)."""
+    dense = p.dense_bytes + act_bytes
+    moved = dram_bytes(p, target) + act_bytes
+    return dense / max(moved, 1.0)

@@ -1,0 +1,429 @@
+"""ANE numerics oracle: the fp16 datapath with a wide accumulator (paper ch. 3).
+
+The paper's single most load-bearing fact is that the engine multiplies in fp16
+end to end while accumulating in a wide (fp32-class) register, with exactly two
+rounding points bracketing the reduction (inputs in, outputs out), plus a set of
+measured edge behaviors a bit-exact oracle must model (§3.6):
+
+  * NaN coerces to +inf at the input boundary; the engine never emits NaN.
+  * IEEE-indeterminate forms flush to +0 (inf-inf, 0*inf, sqrt(-1), log(-1)).
+  * log(0) returns the finite sentinel -45440.
+  * The multiply-accumulate *output port* saturates at 2^15 = 32768, one bit
+    below the fp16 storage ceiling of 65504 (§3.7).
+  * A width-axis slice with a nonzero begin offset applies a fixed x16 gain.
+  * Output rounding is round-half-to-even on the fp16 grid (M1).
+  * The first reduction stage groups lanes into tiles of four before the wide
+    accumulator (Table 3.1 survivor sweep).
+  * Activations evaluate through 33-knot piecewise-linear tables with end-knot
+    clamps and small origin biases (gelu -0.000543, swish -0.001259).
+
+This module is the *reference* model (numpy, float64 carried as "wide"), used
+by tests, by the Pallas kernels' ANE mode as the oracle, and by the
+paper-validation benchmarks. Where the paper leaves a behavior unresolved
+(the in-tile rounding tie mode, §3.6 "2049 rounds to 2048 vs 2050"), the model
+is parameterized and the ambiguity is documented in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Literal
+
+import numpy as np
+
+from repro.core import hal
+
+TieMode = Literal["even", "away"]
+
+# ---------------------------------------------------------------------------
+# fp16 grid rounding with explicit tie control
+# ---------------------------------------------------------------------------
+
+
+def round_fp16(x: np.ndarray | float, tie: TieMode = "even") -> np.ndarray:
+    """Round float64 values onto the fp16 grid with the given tie mode.
+
+    numpy's float16 cast is IEEE round-half-to-even; the half-away mode is
+    synthesized by nudging exact ties away from zero before the cast.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    with np.errstate(over="ignore", invalid="ignore"):
+        f16 = np.float16(x).astype(np.float64)        # IEEE RTNE result
+    if tie == "even":
+        return f16
+    # half-away: find the two fp16 neighbours bracketing x, detect exact ties,
+    # and on a tie pick the larger-magnitude neighbour.
+    up = np.nextafter(np.float16(f16), np.float16(np.inf)).astype(np.float64)
+    dn = np.nextafter(np.float16(f16), np.float16(-np.inf)).astype(np.float64)
+    lo = np.where(f16 <= x, f16, dn)
+    hi = np.where(f16 <= x, up, f16)
+    is_tie = np.isfinite(x) & (lo != hi) & ((x - lo) == (hi - x))
+    away = np.where(x > 0, hi, lo)
+    return np.where(is_tie, away, f16)
+
+
+def saturate_fp16(x: np.ndarray) -> np.ndarray:
+    """fp16 storage saturation: past 65504 the value overflows to inf."""
+    x = np.asarray(x, dtype=np.float64)
+    out = x.copy()
+    out = np.where(x > hal.FP16_MAX, np.inf, out)
+    out = np.where(x < -hal.FP16_MAX, -np.inf, out)
+    return out
+
+
+def coerce_input(x: np.ndarray) -> np.ndarray:
+    """Input-boundary behavior: NaN -> +inf; values round onto the fp16 grid.
+
+    paper:§3.6 — "The engine coerces a NaN to positive infinity at the input
+    boundary, and never produces a NaN anywhere."
+    """
+    x = np.asarray(x, dtype=np.float64)
+    x = np.where(np.isnan(x), np.inf, x)
+    # -0.0 echoes as +0.0 through x+0 (the engine drops a zero's sign bit on
+    # several paths); we keep the sign for elementwise but note reciprocal.
+    return saturate_fp16(round_fp16(x))
+
+
+# ---------------------------------------------------------------------------
+# Wide accumulator with the 4-lane first reduction stage (Table 3.1)
+# ---------------------------------------------------------------------------
+
+InTileMode = Literal["sequential", "exact"]
+
+
+def wide_reduce(
+    v: np.ndarray,
+    *,
+    tile: int = hal.FIRST_STAGE_TILE,
+    in_tile: InTileMode = "sequential",
+    tie: TieMode = "even",
+) -> float:
+    """Model of the engine's vector reduction (one wide accumulator).
+
+    Stage 1 groups adjacent lanes into tiles of `tile` (4 on every measured
+    part); the tile partial is formed in fp16 (sequentially by default, which
+    is the only mode that reproduces the paper's hard floor of exactly four
+    survivors at and above the 4096 threshold), then tile partials accumulate
+    exactly in the wide register. Inputs are first coerced/rounded as at the
+    real input port.
+    """
+    v = coerce_input(np.asarray(v, dtype=np.float64).ravel())
+    n = v.size
+    pad = (-n) % tile
+    if pad:
+        v = np.concatenate([v, np.zeros(pad)])
+    tiles = v.reshape(-1, tile)
+    if in_tile == "sequential":
+        partials = np.zeros(tiles.shape[0])
+        for j in range(tile):
+            partials = round_fp16(partials + tiles[:, j], tie=tie)
+    else:
+        partials = round_fp16(tiles.sum(axis=1), tie=tie)
+    # The wide register: fp32-class. float64 here stands in for "wide enough
+    # that representable partial sums are exact" (true for fp32 at these
+    # magnitudes, and for the probes the paper runs).
+    return float(partials.sum())
+
+
+def survivor_sweep(magnitudes, repeats: int = 16, **kw) -> list[int]:
+    """Reproduce the paper's cancellation-threshold sweep (Table 3.1).
+
+    For each magnitude b, reduce [b, -b, 1] * repeats and report how many of
+    the `repeats` ones survive (the reduction result, since the bigs cancel).
+    """
+    out = []
+    for b in magnitudes:
+        v = np.array([b, -b, 1.0] * repeats)
+        out.append(int(round(wide_reduce(v, **kw))))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The multiply-accumulate datapath (matmul / linear / multi-tap conv)
+# ---------------------------------------------------------------------------
+
+
+def accum_port_saturate(x: np.ndarray) -> np.ndarray:
+    """The MAC output-port ceiling: |result| >= 2^15 -> inf (paper §3.7).
+
+    Pinned to the bit: 32752 (largest fp16 below 2^15) passes, 32768 -> inf.
+    Applies to matmul, linear, and any convolution accumulating >= 2 taps;
+    NOT to dedicated reductions or single elementwise multiplies.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    out = np.where(x >= hal.ACCUM_OUT_CEILING, np.inf, x)
+    out = np.where(x <= -hal.ACCUM_OUT_CEILING, -np.inf, out)
+    return out
+
+
+def ane_matmul(
+    a: np.ndarray,
+    b: np.ndarray,
+    *,
+    scale: np.ndarray | None = None,
+    bias: np.ndarray | None = None,
+    tie: TieMode = "even",
+) -> np.ndarray:
+    """Oracle for the engine's matmul: fp16 in, wide accumulate, fp16 out.
+
+    Order of rounding per §3.1: inputs round to fp16, products accumulate
+    wide, optional per-channel scale and bias apply in fp16, the output port
+    saturates at 2^15, and the store rounds to fp16 (RTNE on M1).
+
+    The port ceiling tracks the *running* partial (§3.7): an interior
+    partial that exceeds 2^15 overflows to infinity even when a later
+    cancellation would have brought the final result back into range.
+    """
+    a = coerce_input(a)
+    b = coerce_input(b)
+    # running partials along the contraction (the lowered accumulation order)
+    partials = np.cumsum(a[..., :, None] * b[None, ...], axis=-2)
+    acc = partials[..., -1, :]
+    hit_hi = np.any(partials >= hal.ACCUM_OUT_CEILING, axis=-2)
+    hit_lo = np.any(partials <= -hal.ACCUM_OUT_CEILING, axis=-2)
+    if scale is not None:
+        acc = round_fp16(acc * coerce_input(scale), tie=tie)
+    if bias is not None:
+        acc = round_fp16(acc + coerce_input(bias), tie=tie)
+    acc = np.where(hit_hi, np.inf, acc)
+    acc = np.where(hit_lo & ~hit_hi, -np.inf, acc)
+    acc = accum_port_saturate(acc)
+    return saturate_fp16(round_fp16(acc, tie=tie))
+
+
+def width_slice(x: np.ndarray, begin: int, size: int, axis: int = -1) -> np.ndarray:
+    """Width-axis slice. A nonzero begin offset routes through the crop DMA,
+    which applies a fixed x16 gain (paper §3.7): fills <= 4094 stay bit-exact
+    after the compensating rescale; 4095+ saturate to inf on the way.
+
+    The model applies gain, stores through the fp16 port (saturating), and
+    removes the gain — matching the observed "4094 passes, 4096 -> inf".
+    """
+    x = np.asarray(x, dtype=np.float64)
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(begin, begin + size)
+    out = x[tuple(sl)]
+    if begin != 0:
+        gained = saturate_fp16(round_fp16(out * hal.WIDTH_SLICE_GAIN))
+        out = np.where(np.isinf(gained), gained, gained / hal.WIDTH_SLICE_GAIN)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Elementwise edge semantics (§3.6)
+# ---------------------------------------------------------------------------
+
+LOG_ZERO_SENTINEL = -45440.0   # paper:§3.6 log(+0) returns a finite sentinel
+
+
+def _flush_indeterminate(x: np.ndarray) -> np.ndarray:
+    """All IEEE-indeterminate (NaN-producing) forms flush to +0."""
+    return np.where(np.isnan(x), 0.0, x)
+
+
+def ane_add(a, b):
+    a, b = coerce_input(a), coerce_input(b)
+    with np.errstate(invalid="ignore"):
+        return saturate_fp16(round_fp16(_flush_indeterminate(a + b)))  # inf-inf -> +0
+
+
+def ane_mul(a, b):
+    a, b = coerce_input(a), coerce_input(b)
+    with np.errstate(invalid="ignore"):
+        return saturate_fp16(round_fp16(_flush_indeterminate(a * b)))  # 0*inf -> +0
+
+
+def ane_sqrt(x):
+    x = coerce_input(x)
+    out = np.sqrt(np.where(x < 0, 0.0, x))       # sqrt(-1) -> +0
+    return round_fp16(out)
+
+
+def ane_log(x):
+    x = coerce_input(x)
+    out = np.where(x < 0, 0.0,                    # log(-1) -> +0
+                   np.where(x == 0, LOG_ZERO_SENTINEL, np.log(np.maximum(x, 1e-300))))
+    return saturate_fp16(round_fp16(out))
+
+
+def ane_reciprocal(x):
+    x = coerce_input(x)
+    x = np.where(x == 0.0, 0.0, x)               # signed zero loses its sign
+    with np.errstate(divide="ignore"):
+        out = np.where(x == 0.0, np.inf, 1.0 / x)   # recip(+-0) -> +inf
+    return saturate_fp16(round_fp16(out))
+
+
+def ane_rsqrt(x):
+    x = coerce_input(x)
+    x = np.abs(np.where(x == 0.0, 0.0, x))       # rsqrt(-0) -> +inf per paper
+    with np.errstate(divide="ignore"):
+        out = np.where(x == 0.0, np.inf, 1.0 / np.sqrt(x))
+    return saturate_fp16(round_fp16(out))
+
+
+def ane_relu(x):
+    x = coerce_input(x)                           # NaN -> +inf -> relu -> +inf
+    return np.maximum(x, 0.0)
+
+
+def ane_max(a, b):
+    a, b = coerce_input(a), coerce_input(b)       # NaN -> +inf wins the max
+    return np.maximum(a, b)
+
+
+def ane_softmax(x, axis: int = -1):
+    """Fused softmax subtracts a hardware max first, so it never overflows
+    (paper §3.6: softmax([1000,1,2,3]) == [1,0,0,0]); a NaN lane coerces to
+    +inf and takes all the mass."""
+    x = coerce_input(x)
+    m = np.max(x, axis=axis, keepdims=True)
+    # +inf lanes: exp(inf - inf) would be indeterminate -> the engine puts the
+    # mass on the max lane(s).
+    with np.errstate(invalid="ignore"):
+        shifted = x - m
+    shifted = np.where(np.isnan(shifted), 0.0, shifted)   # inf - inf -> 0
+    e = np.exp(shifted)
+    out = e / np.sum(e, axis=axis, keepdims=True)
+    return round_fp16(out)
+
+
+def ane_exp(x):
+    """Bare exp overflows at ln(65504) ~ 11.094 — no max-subtraction."""
+    x = coerce_input(x)
+    with np.errstate(over="ignore"):
+        return saturate_fp16(round_fp16(np.exp(x)))
+
+
+# ---------------------------------------------------------------------------
+# 33-knot piecewise-linear activation tables (§3.5)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LutTable:
+    """One decoded activation table: 33 knots, 32 linear segments, end clamps."""
+
+    name: str
+    xs: np.ndarray          # (33,) knot abscissae, ascending
+    ys: np.ndarray          # (33,) knot ordinates (fp16-rounded, as stored)
+    lo_clamp: float         # asymptote value left of the domain
+    hi_clamp: float         # asymptote value right of the domain
+
+    @property
+    def slopes(self) -> np.ndarray:
+        return (self.ys[1:] - self.ys[:-1]) / (self.xs[1:] - self.xs[:-1])
+
+    @property
+    def intercepts(self) -> np.ndarray:
+        return self.ys[:-1] - self.slopes * self.xs[:-1]
+
+    def __call__(self, x: np.ndarray) -> np.ndarray:
+        """Evaluate: NaN coerces to the hi clamp (the +inf coercion), values
+        past the table domain clamp to the end-knot asymptote, in-domain
+        values evaluate as slope*x + intercept in fp16."""
+        x = np.asarray(x, dtype=np.float64)
+        x = np.where(np.isnan(x), np.inf, x)
+        idx = np.clip(np.searchsorted(self.xs, x, side="right") - 1, 0, 31)
+        s, c = self.slopes[idx], self.intercepts[idx]
+        val = round_fp16(s * x + c)
+        val = np.where(x < self.xs[0], self.lo_clamp, val)
+        val = np.where(x > self.xs[-1], self.hi_clamp, val)
+        return val
+
+
+def _optimal_knots(fn: Callable, lo: float, hi: float, n: int) -> np.ndarray:
+    """Knot placement with density ~ |f''|^(1/2), the optimal rate for PWL
+    interpolation — this is how a fixed 33-knot table reaches the sub-0.4%%
+    worst errors the paper measures (§3.5: accuracy comes from the piecewise
+    fit and the per-function domain, not sample density)."""
+    grid = np.linspace(lo, hi, 4097)
+    h = grid[1] - grid[0]
+    f = fn(grid)
+    f2 = np.abs(np.gradient(np.gradient(f, h), h))
+    density = np.sqrt(f2) + 1e-4 * np.max(np.sqrt(f2) + 1e-30)
+    cdf = np.cumsum(density)
+    cdf = (cdf - cdf[0]) / (cdf[-1] - cdf[0])
+    qs = np.linspace(0.0, 1.0, n)
+    xs = np.interp(qs, cdf, grid)
+    xs[0], xs[-1] = lo, hi
+    # Lloyd-style refinement: redistribute knots so per-segment PWL error
+    # equalizes (a few iterations suffice to reach the paper's error floor).
+    for _ in range(6):
+        seg_err = np.empty(xs.size - 1)
+        for i in range(xs.size - 1):
+            g = np.linspace(xs[i], xs[i + 1], 65)
+            lin = f_at(fn, xs[i], xs[i + 1], g)
+            seg_err[i] = np.max(np.abs(fn(g) - lin))
+        w = np.repeat(np.power(seg_err + 1e-12, 0.5), 1)
+        cdf = np.concatenate([[0.0], np.cumsum(w)])
+        cdf = cdf / cdf[-1]
+        xs = np.interp(np.linspace(0, 1, n), cdf, xs)
+        xs[0], xs[-1] = lo, hi
+    return xs
+
+
+def f_at(fn, x0, x1, g):
+    """Chord of fn between x0 and x1, evaluated at grid g."""
+    y0 = fn(np.asarray(x0, dtype=np.float64))
+    y1 = fn(np.asarray(x1, dtype=np.float64))
+    t = (g - x0) / (x1 - x0)
+    return y0 + t * (y1 - y0)
+
+
+_LUT_SPECS: dict[str, tuple[Callable, float, float, float, float]] = {
+    # name: (fn, lo, hi, lo_clamp, hi_clamp)
+    "sigmoid": (lambda x: 1 / (1 + np.exp(-x)), *hal.SIGMOID_DOMAIN, 0.0, 1.0),
+    "tanh": (np.tanh, -3.6, 3.6, -1.0, 1.0),
+    "gelu": (lambda x: x * 0.5 * (1 + _erf_np(x / math.sqrt(2))), -6.0, 6.0, 0.0, np.inf),
+    "swish": (lambda x: x / (1 + np.exp(-x)), -9.0, 9.0, 0.0, np.inf),
+    "erf": (lambda x: _erf_np(x), -3.9, 3.9, -1.0, 1.0),
+    "exp": (np.exp, -11.1, 11.05, 0.0, np.inf),
+    # exp's hi clamp stays +inf: past ln(65504) ~ 11.094 a bare exp overflows
+    # to infinity (paper:T3.3), which the table reproduces via the clamp.
+    "softplus": (lambda x: np.logaddexp(0.0, x), -10.0, 10.0, 0.0, 0.0),
+    # softplus(+inf) -> +0 is a measured table collapse (§3.6), hence hi_clamp=0
+    "softsign": (lambda x: x / (1 + np.abs(x)), -16.0, 16.0, -1.0, 0.0),
+    "sin": (np.sin, -math.pi, math.pi, 0.0, 0.0),
+    "cos": (np.cos, -math.pi, math.pi, 0.0, 0.0),
+}
+
+
+def _erf_np(x):
+    # vectorized erf without scipy
+    return np.vectorize(math.erf)(np.asarray(x, dtype=np.float64))
+
+
+_ORIGIN_BIAS = {"gelu": -0.000543, "swish": -0.001259}   # paper:T3.3
+
+
+def build_lut(name: str, knots: int = hal.LUT_KNOTS) -> LutTable:
+    """Fit the 33-knot table for one activation; gelu/swish carry the decoded
+    constant origin bias the paper reports (a bit-exact oracle must hold it)."""
+    fn, lo, hi, lo_clamp, hi_clamp = _LUT_SPECS[name]
+    xs = _optimal_knots(fn, lo, hi, knots)
+    ys = fn(xs)
+    if name in _ORIGIN_BIAS:
+        # shift the whole table by the decoded origin bias so eval(0) matches
+        i = np.argmin(np.abs(xs))
+        xs[i] = 0.0
+        ys = fn(xs) + _ORIGIN_BIAS[name]
+    ys = round_fp16(ys)
+    if hi_clamp == np.inf and name != "exp":
+        hi_clamp = float(ys[-1])
+    return LutTable(name=name, xs=xs, ys=ys, lo_clamp=float(lo_clamp),
+                    hi_clamp=float(hi_clamp))
+
+
+def lut_worst_error(table: LutTable, n: int = 20001) -> float:
+    """Worst absolute error of the table against the exact function over its
+    domain (the paper's per-function figures: sigmoid 0.0034, tanh 0.0017,
+    gelu 0.0059)."""
+    fn = _LUT_SPECS[table.name][0]
+    xs = np.linspace(table.xs[0], table.xs[-1], n)
+    exact = fn(xs)
+    if table.name in _ORIGIN_BIAS:
+        exact = exact + _ORIGIN_BIAS[table.name]
+    err = np.abs(table(xs) - exact)
+    return float(np.max(err[np.isfinite(err)]))

@@ -1,0 +1,266 @@
+"""Three-term roofline analysis from compiled XLA artifacts (paper ch. 9).
+
+The paper's machine obeys R(I) = min(P, I·B) with a ridge at I* = P/B, a hard
+on-chip working-set threshold, and a per-dispatch floor t0 (§9). On a pod the
+same discipline adds a third, collective term (the single-chip ANE's
+"transfer penalty" generalized to ICI):
+
+    compute_s    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory_s     = HLO_bytes / (chips * HBM_bw)
+    collective_s = collective_bytes / (chips * link_bw)
+
+`compiled.cost_analysis()` supplies FLOPs/bytes; collective bytes are parsed
+from the post-SPMD optimized HLO text (`compiled.as_text()`), summing operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, per the assignment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Mapping
+
+from repro.core import hal
+from repro.core.hal import Target
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# matches e.g.  bf16[16,1024,512]{2,1,0}   or  f32[] (scalar)
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-kind operand bytes of the collectives in one compiled module."""
+
+    bytes_by_kind: dict[str, float]
+    count_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))          # [num_groups, group_size]<=[...]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum *operand* sizes of every collective op in optimized HLO text.
+
+    Post-optimization HLO prints operands as bare names (no shapes), so the
+    operand size is derived from the RESULT shape on the definition line plus
+    the op's semantics: an all-gather's operand is result/group_size, a
+    reduce-scatter's is result*group_size, and all-reduce / all-to-all /
+    collective-permute move operand == result. Async `-start/-done` pairs
+    count once (the `-start` line).
+    """
+    bytes_by: dict[str, float] = {k: 0.0 for k in _COLLECTIVE_OPS}
+    count_by: dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s+((?:\([^)]*\)|\S+))\s+([a-z0-9-]+)\(", stripped)
+        if not m:
+            continue
+        opcode = m.group(2)
+        kind = None
+        for c in _COLLECTIVE_OPS:
+            if opcode == c or opcode == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        result = m.group(1)
+        total = 0.0
+        for sm in _SHAPE_RE.finditer(result):
+            total += _shape_bytes(sm.group(1), sm.group(2))
+        g = _group_size(stripped)
+        if kind == "all-gather" and g > 0:
+            total /= g
+        elif kind == "reduce-scatter":
+            total *= g
+        bytes_by[kind] += total
+        count_by[kind] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    """The three terms for one (arch x shape x mesh) cell, in seconds."""
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    target: str
+    # raw artifact numbers (per-chip, as reported by the SPMD module)
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    peak_memory_per_chip: float
+    # the three terms
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # usefulness
+    model_flops: float            # 6·N_active·D convention, global
+    useful_ratio: float           # model_flops / (hlo_flops_per_chip * chips)
+    collectives: Mapping[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-bound step estimate: overlapped terms -> max()."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roof the step achieves if it runs at the
+        roofline bound: useful compute time / bound time."""
+        if self.step_time_s == 0:
+            return 0.0
+        useful_compute_s = (self.model_flops / max(self.chips, 1)) / _peak(self.target)
+        return useful_compute_s / self.step_time_s
+
+    @property
+    def mfu(self) -> float:
+        return self.roofline_fraction
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_s": self.step_time_s,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "hlo_bytes_per_chip": self.hlo_bytes_per_chip,
+            "coll_bytes_per_chip": self.collective_bytes_per_chip,
+            "peak_mem_gb": self.peak_memory_per_chip / 2**30,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def _peak(target_name: str) -> float:
+    return hal.get_target(target_name).peak_flops
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost_analysis: Mapping[str, float],
+    hlo_text: str,
+    memory_analysis=None,
+    model_flops: float = 0.0,
+    target: Target = hal.TPU_V5E,
+) -> RooflineReport:
+    """Build the three-term report for one compiled cell.
+
+    `cost_analysis` and `hlo_text` describe the per-chip SPMD module, so the
+    terms divide by per-chip roofs directly (equivalent to the assignment's
+    global/(chips*roof) form).
+    """
+    flops = float(cost_analysis.get("flops", 0.0))
+    byt = float(cost_analysis.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+    peak_mem = 0.0
+    if memory_analysis is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            peak_mem += float(getattr(memory_analysis, attr, 0.0) or 0.0)
+        alias = float(getattr(memory_analysis, "alias_size_in_bytes", 0.0) or 0.0)
+        peak_mem -= alias
+    compute_s = flops / target.peak_flops
+    memory_s = byt / target.hbm_bandwidth
+    collective_s = coll.total_bytes / target.collective_bandwidth
+    useful = model_flops / max(flops * chips, 1.0)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips, target=target.name,
+        hlo_flops_per_chip=flops, hlo_bytes_per_chip=byt,
+        collective_bytes_per_chip=coll.total_bytes,
+        peak_memory_per_chip=peak_mem,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=model_flops, useful_ratio=useful,
+        collectives=dict(coll.bytes_by_kind),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The paper's single-chip roofline + energy model (ch. 9 / 10), reused by the
+# benchmarks to reproduce Table 9.2 / 10.4.
+# ---------------------------------------------------------------------------
+
+
+def attainable_rate(intensity: float, target: Target) -> float:
+    """R(I) = min(P, I*B)."""
+    return min(target.peak_flops, intensity * target.hbm_bandwidth)
+
+
+def dispatch_time(flops: float, bytes_moved: float,
+                  target: Target) -> tuple[float, float]:
+    """t = t0 + work/R (§9.3). Returns (seconds, attainable FLOP/s).
+
+    Callers model fusion by charging t0 once for a fused chain instead of
+    once per op (paper §9.4)."""
+    intensity = flops / max(bytes_moved, 1.0)
+    r = attainable_rate(intensity, target)
+    return target.dispatch_floor_s + flops / max(r, 1.0), r
+
+
+def energy_joules(flops: float, seconds: float, target: Target,
+                  utilization: float | None = None) -> float:
+    """Paper §10.5: draw scales with utilization between a dispatch-floor
+    wattage and the compute-bound peak; energy = power * time."""
+    p_floor = 0.9 if target.family == "ane" else 60.0     # W (paper / modeled)
+    p_peak = 4.3 if target.family == "ane" else 170.0     # W
+    if utilization is None:
+        peak_time = flops / target.peak_flops
+        utilization = min(1.0, peak_time / max(seconds, 1e-12))
+    watts = p_floor + (p_peak - p_floor) * utilization
+    return watts * seconds

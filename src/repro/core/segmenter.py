@@ -1,0 +1,162 @@
+"""Cost-driven placement segmenter (paper §5.3).
+
+The model framework segments an op graph across backends by solving a
+shortest path over a cost graph with one node per (operation, backend) pair:
+
+    cost(op, backend) = max(flops / gflops_b, bytes / bw_b) + launch + transfer
+
+A fixed launch penalty is charged at every new segment (backend change) and a
+transfer penalty at every backend boundary (the tensor repack between the
+engine's layout and the host's). The transfer cost is why minimum-cost
+solutions favor long single-backend runs — we reproduce that property in
+tests. An op a backend cannot accept simply has no node on that backend, so
+the path routes around it (the framework's automatic fallback).
+
+The TPU adaptation keeps the mechanism and swaps the backends: instead of
+{CPU, GPU, ANE}, we place over {pallas-mxu, xla, host}, with transfer =
+re-layout/resharding cost from the roofline's collective term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Mapping, Sequence
+
+from repro.core.costmodel import OpCost
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One placement backend with its two coarse anchors (paper:
+    GetEngineGflopsPerS / GetEngineBwGbPerS) and a per-op validity check."""
+
+    name: str
+    flops_per_s: float
+    bytes_per_s: float
+    # ops this backend refuses (no node in the cost graph)
+    rejects: frozenset[str] = frozenset()
+
+    def op_cost(self, op: OpCost) -> float:
+        return max(op.flops / self.flops_per_s, op.bytes / self.bytes_per_s)
+
+    def accepts(self, op: OpCost) -> bool:
+        return not any(tag in op.name for tag in self.rejects)
+
+
+# The paper's three devices, with the M1 anchors (paper:T9.1/T9.2).
+ANE_BACKENDS = (
+    Backend("ane", 12e12, 51e9),                      # engine: fast, weight-stream bw
+    Backend("gpu", 2.6e12, 230e9),                    # M1 GPU
+    Backend("cpu", 0.2e12, 60e9),
+)
+
+# The TPU adaptation's backends.
+TPU_BACKENDS = (
+    Backend("pallas-mxu", 197e12, 819e9),
+    Backend("xla", 160e12, 819e9),                    # default codegen, slightly off-peak
+    Backend("host", 0.4e12, 40e9),
+)
+
+
+@dataclasses.dataclass
+class Placement:
+    ops: list[str]
+    backend: list[str]
+    cost: float
+
+    @property
+    def segments(self) -> list[tuple[str, int]]:
+        """(backend, op_count) runs — the paper's 'fewer and larger segments'."""
+        segs: list[tuple[str, int]] = []
+        for b in self.backend:
+            if segs and segs[-1][0] == b:
+                segs[-1] = (b, segs[-1][1] + 1)
+            else:
+                segs.append((b, 1))
+        return segs
+
+
+def place(
+    ops: Sequence[OpCost],
+    backends: Sequence[Backend] = ANE_BACKENDS,
+    *,
+    launch_penalty: float = 0.23e-3,       # paper: the per-dispatch floor
+    transfer_bytes_per_s: float = 24e9,    # repack at each boundary (paper: standalone act path)
+) -> Placement:
+    """Dijkstra over the (op index, backend) lattice.
+
+    Node (i, b) = "op i runs on backend b". Edge (i, b) -> (i+1, b') costs
+    op_cost(i+1, b') plus, when b != b', the launch penalty of the new segment
+    and the transfer of op i's output across the boundary.
+    """
+    n = len(ops)
+    if n == 0:
+        return Placement([], [], 0.0)
+    names = [b.name for b in backends]
+    start: list[tuple[float, int]] = []
+    dist: dict[tuple[int, int], float] = {}
+    prev: dict[tuple[int, int], tuple[int, int] | None] = {}
+    pq: list[tuple[float, int, int]] = []
+    for bi, b in enumerate(backends):
+        if b.accepts(ops[0]):
+            c = b.op_cost(ops[0]) + launch_penalty
+            dist[(0, bi)] = c
+            prev[(0, bi)] = None
+            heapq.heappush(pq, (c, 0, bi))
+    while pq:
+        d, i, bi = heapq.heappop(pq)
+        if d > dist.get((i, bi), float("inf")):
+            continue
+        if i == n - 1:
+            continue
+        for bj, b2 in enumerate(backends):
+            if not b2.accepts(ops[i + 1]):
+                continue
+            c = b2.op_cost(ops[i + 1])
+            if bj != bi:
+                c += launch_penalty
+                c += ops[i].bytes / transfer_bytes_per_s   # boundary repack
+            nd = d + c
+            if nd < dist.get((i + 1, bj), float("inf")):
+                dist[(i + 1, bj)] = nd
+                prev[(i + 1, bj)] = (i, bi)
+                heapq.heappush(pq, (nd, i + 1, bj))
+    # best terminal
+    best = min(((dist.get((n - 1, bi), float("inf")), bi)
+                for bi in range(len(backends))), key=lambda t: t[0])
+    if best[0] == float("inf"):
+        raise ValueError("no feasible placement: some op rejected by every backend")
+    # reconstruct
+    path: list[int] = []
+    node: tuple[int, int] | None = (n - 1, best[1])
+    while node is not None:
+        path.append(node[1])
+        node = prev[node]
+    path.reverse()
+    return Placement([o.name for o in ops], [names[bi] for bi in path], best[0])
+
+
+def brute_force(ops: Sequence[OpCost], backends: Sequence[Backend],
+                **kw) -> Placement:
+    """Exponential reference for tests (small graphs only)."""
+    import itertools
+
+    launch = kw.get("launch_penalty", 0.23e-3)
+    xfer = kw.get("transfer_bytes_per_s", 24e9)
+    names = [b.name for b in backends]
+    best: Placement | None = None
+    for assign in itertools.product(range(len(backends)), repeat=len(ops)):
+        ok = all(backends[bi].accepts(op) for bi, op in zip(assign, ops))
+        if not ok:
+            continue
+        cost = launch + backends[assign[0]].op_cost(ops[0])
+        for i in range(1, len(ops)):
+            cost += backends[assign[i]].op_cost(ops[i])
+            if assign[i] != assign[i - 1]:
+                cost += launch + ops[i - 1].bytes / xfer
+        if best is None or cost < best.cost:
+            best = Placement([o.name for o in ops],
+                             [names[bi] for bi in assign], cost)
+    assert best is not None
+    return best

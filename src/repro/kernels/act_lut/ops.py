@@ -1,0 +1,46 @@
+"""Public wrapper: named-activation evaluation through the kernel tables.
+
+`lut_activation("gelu")(x)` evaluates gelu the way the engine does — through
+its decoded 33-knot table, including the origin bias and clamp semantics.
+Gradients: the PWL derivative is the segment slope; custom_jvp makes the
+tables trainable-through (useful for QAT-style experiments)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.numerics import build_lut
+from repro.kernels.act_lut.act_lut import act_lut
+
+
+@functools.cache
+def _tables(name: str):
+    t = build_lut(name)
+    return (jnp.asarray(np.asarray(t.xs, np.float32)),
+            jnp.asarray(np.asarray(t.slopes, np.float32)),
+            jnp.asarray(np.asarray(t.intercepts, np.float32)),
+            jnp.asarray(np.asarray([t.lo_clamp, t.hi_clamp], np.float32)))
+
+
+def lut_activation(name: str, *, ane_mode: bool = True):
+    xs, sl, ic, cl = _tables(name)
+
+    @jax.custom_jvp
+    def f(x):
+        return act_lut(x, xs, sl, ic, cl, ane_mode=ane_mode)
+
+    @f.defjvp
+    def _jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        y = f(x)
+        # derivative = segment slope (0 outside the domain)
+        idx = jnp.clip(jnp.searchsorted(xs, x.astype(jnp.float32)) - 1, 0, 31)
+        g = sl[idx]
+        g = jnp.where((x < xs[0]) | (x > xs[-1]), 0.0, g)
+        return y, (g * dx.astype(jnp.float32)).astype(y.dtype)
+
+    return f

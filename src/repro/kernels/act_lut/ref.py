@@ -1,0 +1,22 @@
+"""Oracle for act_lut: `core.numerics.LutTable.__call__` (numpy, fp16-exact)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.numerics import LutTable, build_lut
+
+
+def act_lut_ref(x: np.ndarray, table: LutTable) -> np.ndarray:
+    return table(np.asarray(x, dtype=np.float64))
+
+
+def table_arrays(table: LutTable):
+    """(xs, slopes, intercepts, clamps) arrays the kernel consumes."""
+    return (np.asarray(table.xs, np.float32),
+            np.asarray(table.slopes, np.float32),
+            np.asarray(table.intercepts, np.float32),
+            np.asarray([table.lo_clamp, table.hi_clamp], np.float32))
+
+
+__all__ = ["act_lut_ref", "build_lut", "table_arrays"]

@@ -1,0 +1,42 @@
+"""jit'd public wrapper for anemm with training-grade gradients.
+
+Forward runs the Pallas kernel; backward uses standard XLA matmuls (the
+universal practice for matmul kernels — the transpose contractions are
+themselves plain matmuls XLA already emits optimally). ANE mode is a
+serving/emulation path and is non-differentiable by design: the saturation
+epilogue has measure-zero gradient support.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.anemm.anemm import anemm as _anemm_kernel
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def matmul(a: jnp.ndarray, b: jnp.ndarray, ane_mode: bool = False):
+    return _anemm_kernel(a, b, ane_mode=ane_mode)
+
+
+def _fwd(a, b, ane_mode):
+    return matmul(a, b, ane_mode), (a, b)
+
+
+def _bwd(ane_mode, res, g):
+    a, b = res
+    g = g.astype(jnp.float32)
+    da = (g @ b.astype(jnp.float32).T).astype(a.dtype)
+    db = (a.astype(jnp.float32).T @ g).astype(b.dtype)
+    return da, db
+
+
+matmul.defvjp(_fwd, _bwd)
+
+
+def linear(a, b, scale=None, bias=None, *, ane_mode: bool = False):
+    """Inference-path linear with the fused epilogue (scale/bias/saturate)."""
+    return _anemm_kernel(a, b, scale, bias, ane_mode=ane_mode)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for anemm."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hal
+
+
+def anemm_ref(a, b, scale=None, bias=None, *, ane_mode: bool = False):
+    acc = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    if scale is not None:
+        acc = acc * scale.astype(jnp.float32)[None, :]
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)[None, :]
+    if ane_mode:
+        acc = jnp.where(acc >= hal.ACCUM_OUT_CEILING, jnp.inf, acc)
+        acc = jnp.where(acc <= -hal.ACCUM_OUT_CEILING, -jnp.inf, acc)
+    return acc.astype(a.dtype)

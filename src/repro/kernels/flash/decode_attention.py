@@ -1,0 +1,136 @@
+"""flash decode: one-token GQA attention against a long KV cache.
+
+The serving hot path (paper ch.14): a single query row per sequence scanned
+against a 32k-500k entry cache. Decode attention is pure weight/cache
+streaming — arithmetic intensity ~1 — so the kernel's job is to keep HBM
+reads perfectly sequential and the softmax state in VMEM:
+
+grid (B, KVH, S/bk), KV innermost; scratch carries the online-softmax
+(m, l, acc) for the g grouped query heads of one kv head. Invalid cache
+slots (beyond the written length, or outside a rolling window) mask via the
+positions array, which streams alongside the cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv, interpret_mode, pad_to
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, nk: int, scale: float, window,
+            out_dtype):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (g, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = pos_ref[0]                                  # (bk,) written positions
+    cur = cur_ref[0, 0]
+    valid = (pos >= 0) & (pos <= cur)
+    if window is not None:
+        valid &= (cur - pos) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)         # (g, bk)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (bk, d)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _store():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "scale"))
+def decode_attention(
+    q: jnp.ndarray,            # (B, H, d) one query row per sequence
+    k_cache: jnp.ndarray,      # (B, S, KV, d)
+    v_cache: jnp.ndarray,      # (B, S, KV, d)
+    positions: jnp.ndarray,    # (B, S) written absolute position per slot (-1 empty)
+    current: jnp.ndarray,      # (B,) current decode position
+    *,
+    window: int | None = None,
+    bk: int = 512,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    bk = min(bk, max(s, 8))
+    kp = pad_to(k_cache, 1, bk)
+    vp = pad_to(v_cache, 1, bk)
+    pp = pad_to(positions, 1, bk)
+    if pp.shape[1] != positions.shape[1]:
+        # padded slots must read as empty
+        pad_width = pp.shape[1] - positions.shape[1]
+        pp = jnp.concatenate([positions,
+                              jnp.full((b, pad_width), -1, positions.dtype)],
+                             axis=1)
+    nk = cdiv(kp.shape[1], bk)
+    # (B, KVH, g, d) query layout: kv-head-major groups
+    qg = q.reshape(b, kvh, g, d)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, scale=scale, window=window,
+                          out_dtype=q.dtype),
+        grid=(b, kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk), lambda bi, hi, ki: (bi, ki)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ki: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret_mode(),
+    )(qg, kp, vp, pp, current.reshape(b, 1).astype(jnp.int32))
+    return out.reshape(b, h, d)
+
+
+def decode_attention_ref(q, k_cache, v_cache, positions, current,
+                         *, window=None, scale=None):
+    """jnp oracle (mirrors models/attention._decode_attention)."""
+    b, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, kvh, g, d)
+    sc = jnp.einsum("bkgd,bckd->bkgc", qg.astype(jnp.float32),
+                    k_cache.astype(jnp.float32)) * scale
+    valid = (positions >= 0) & (positions <= current[:, None])
+    if window is not None:
+        valid &= (current[:, None] - positions) < window
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

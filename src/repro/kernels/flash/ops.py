@@ -1,0 +1,45 @@
+"""Public wrapper: flash forward kernel + recompute backward.
+
+Backward recomputes attention through the memory-safe chunked reference
+(standard flash practice: store no S x S intermediates; trade ~1 extra
+forward of FLOPs). The vjp of the chunked reference is itself chunked, so
+peak memory stays O(block) in both directions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash.flash_attention import flash_attention
+from repro.models.attention import chunked_attention
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def attention(q, k, v, causal: bool = True, window: int | None = None):
+    """q: (B, H, Sq, d); k/v: (B, KVH, Skv, d)."""
+    return flash_attention(q, k, v, causal=causal, window=window)
+
+
+def _ref_bhsd(q, k, v, causal, window):
+    # chunked_attention wants (B, S, H, d)
+    out = chunked_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=causal,
+                            window=window)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _fwd(q, k, v, causal, window):
+    return attention(q, k, v, causal, window), (q, k, v)
+
+
+def _bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: _ref_bhsd(q, k, v, causal, window),
+                     q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (materialized scores, fp32)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    b, h, sq, d = q.shape
+    _, kvh, skv, _ = k.shape
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    kq = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    allow = jnp.ones((sq, skv), bool)
+    if causal:
+        allow &= kpos <= qpos
+    if window is not None:
+        allow &= (qpos - kpos) < window
+    s = jnp.where(allow[None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vq).astype(q.dtype)

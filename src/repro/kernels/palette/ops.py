@@ -1,0 +1,36 @@
+"""Public wrapper: pack once, stream many (compile-once / dispatch-many).
+
+`PaletteLinear` holds the packed weight + codebook and exposes the matmul;
+`hbm_bytes()` reports what actually crosses memory per dispatch — the number
+the compression benchmarks check against the paper's 2.37x stream gain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.palette.palette_matmul import pack_kn, palette_matmul
+
+
+@dataclasses.dataclass
+class PaletteLinear:
+    packed: jnp.ndarray
+    lut: jnp.ndarray
+    shape: tuple[int, int]
+
+    @classmethod
+    def pack(cls, w: np.ndarray) -> "PaletteLinear":
+        packed, lut = pack_kn(w)
+        return cls(jnp.asarray(packed), jnp.asarray(lut), tuple(w.shape))
+
+    def __call__(self, a: jnp.ndarray) -> jnp.ndarray:
+        return palette_matmul(a, self.packed, self.lut)
+
+    def hbm_bytes(self) -> int:
+        return self.packed.size * 1 + self.lut.size * 4
+
+    def dense_bytes(self) -> int:
+        return self.shape[0] * self.shape[1] * 2

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for palette_matmul: dequantize dense, then matmul.
+
+This is literally the paper's FOLD path (§7.3): the weight expands to dense
+fp16 before the data-movement step — same arithmetic as the streaming
+kernel, but the bytes that cross memory are full-width. The benchmark
+contrasts the two paths' byte counts; the tests contrast their values
+(which must match exactly up to accumulation order).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.palette.palette_matmul import unpack_dense
+
+
+def palette_matmul_ref(a, packed, lut):
+    w = unpack_dense(packed, lut.astype(jnp.float32))
+    return jax.lax.dot_general(a, w.astype(a.dtype), (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32
+                               ).astype(a.dtype)

@@ -1,0 +1,32 @@
+"""Public wrapper for the pair-structured sparse linear."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sparse.sparse_matmul import pack_pair_sparse, sparse_matmul
+
+
+@dataclasses.dataclass
+class SparseLinear:
+    values: jnp.ndarray
+    selector: jnp.ndarray
+    shape: tuple[int, int]
+
+    @classmethod
+    def pack(cls, w: np.ndarray) -> "SparseLinear":
+        vals, sel = pack_pair_sparse(w)
+        return cls(jnp.asarray(vals), jnp.asarray(sel), tuple(w.shape))
+
+    def __call__(self, a: jnp.ndarray) -> jnp.ndarray:
+        return sparse_matmul(a, self.values, self.selector)
+
+    def hbm_bytes(self) -> int:
+        return (self.values.size * self.values.dtype.itemsize
+                + self.selector.size)
+
+    def dense_bytes(self) -> int:
+        return self.shape[0] * self.shape[1] * 2

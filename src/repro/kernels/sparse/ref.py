@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for sparse_matmul: reconstruct dense, then matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse.sparse_matmul import unpack_dense
+
+
+def sparse_matmul_ref(a, values, selector):
+    w = unpack_dense(values, selector)
+    return jax.lax.dot_general(a, w.astype(a.dtype), (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32
+                               ).astype(a.dtype)

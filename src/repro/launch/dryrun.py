@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # CPU-XLA hoists loop-invariant converts of the whole residual stack out
+    # of the backward while-loop (doubling temp memory with an fp32 copy a
+    # real TPU toolchain would never materialize) — disable that pass so
+    # memory_analysis reflects the per-step working set:
+    "--xla_disable_hlo_passes=while-loop-expensive-invariant-code-motion "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+This is how the distribution config is proven coherent without hardware:
+`.lower().compile()` against ShapeDtypeStruct stand-ins (no allocation) on
+the 16x16 production mesh and the 2x16x16 multi-pod mesh. A sharding
+mismatch, compile-time OOM, or unsupported collective here is a bug in the
+framework, not an environment problem.
+
+Per cell it records: memory_analysis (fits?), cost_analysis (FLOPs/bytes),
+the parsed collective bytes, and the three roofline terms (§Roofline of
+EXPERIMENTS.md reads these JSONs). It is also the paper's confirm-op rule
+(§4.6) applied at system scale: only the compile on the real target counts.
+
+`--all` fans cells out to subprocesses (one compile per process: isolates
+failures, frees memory between cells).
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import analytic, costmodel, hal, roofline
+from repro.models.model import build_model
+from repro.optim import adamw
+from repro.parallel import sharding as shard_lib
+from repro.parallel.ctx import ParallelContext
+from repro.launch.mesh import make_production_mesh
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+
+def _named(specs, mesh):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if s is not None else None, specs,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec) or s is None)
+
+
+def _with_sharding(sds_tree, shard_tree):
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+        if sh is not None else sds,
+        sds_tree, shard_tree)
+
+
+def parse_overrides(text: str) -> dict:
+    """'seq_shard=True,remat=dots,moe_capacity_factor=1.0' -> kwargs."""
+    out = {}
+    if not text:
+        return out
+    for part in text.split(","):
+        k, v = part.split("=")
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh_kind: str,
+               *, overrides: str = ""):
+    """Construct (fn, arg_specs, donate) for one cell — not yet lowered."""
+    cfg = configs.get_config(arch)
+    ov = parse_overrides(overrides)
+    if ov:
+        cfg = dataclasses.replace(cfg, **ov)
+    shape = configs.SHAPES[shape_name]
+    runs, why = configs.cell_runs(cfg, shape)
+    if not runs:
+        return None, why
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    ctx = ParallelContext(mesh=mesh)
+    model = build_model(cfg, ctx)
+
+    pspecs_tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = shard_lib.param_specs(pspecs_tree, ctx)
+    params_sds = _with_sharding(pspecs_tree, _named(pspecs, mesh))
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig(moment_dtype="bfloat16")
+        opt_tree = jax.eval_shape(
+            functools.partial(adamw.init_state, opt_cfg), pspecs_tree)
+        ospecs = shard_lib.opt_state_specs(opt_tree, pspecs, ctx, zero1=True)
+        opt_sds = _with_sharding(opt_tree, _named(ospecs, mesh))
+        batch_tree = model.input_specs(shape)
+        bspecs = shard_lib.batch_specs(batch_tree, ctx)
+        batch_sds = _with_sharding(batch_tree, _named(bspecs, mesh))
+
+        from repro.launch.train import make_train_step
+        step = make_train_step(model, opt_cfg)
+        fn = jax.jit(step, donate_argnums=(0, 1),
+                     out_shardings=(_named(pspecs, mesh),
+                                    _named(ospecs, mesh), None))
+        args = (params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        batch_tree = model.input_specs(shape)
+        bspecs = shard_lib.batch_specs(batch_tree, ctx)
+        batch_sds = _with_sharding(batch_tree, _named(bspecs, mesh))
+        fn = jax.jit(model.prefill)
+        args = (params_sds, batch_sds)
+    else:  # decode
+        specs = model.input_specs(shape)
+        cspecs = shard_lib.cache_specs(specs["caches"], ctx,
+                                       seq_fallback=cfg.shard_cache_seq)
+        cache_sds = _with_sharding(specs["caches"], _named(cspecs, mesh))
+        tok_sds = _with_sharding(
+            {"t": specs["token"], "p": specs["pos"]},
+            _named(shard_lib.batch_specs(
+                {"t": specs["token"], "p": specs["pos"]}, ctx), mesh))
+        fn = jax.jit(model.decode_step, donate_argnums=(1,),
+                     out_shardings=(_named(cspecs, mesh), None))
+        args = (params_sds, cache_sds, tok_sds["t"], tok_sds["p"])
+    return (fn, args, cfg, shape, mesh, ctx), ""
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             overrides: str = "") -> dict:
+    t0 = time.perf_counter()
+    built, why = build_cell(arch, shape_name, mesh_kind, overrides=overrides)
+    if built is None:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "SKIP", "reason": why}
+    fn, args, cfg, shape, mesh, ctx = built
+    chips = mesh.devices.size
+
+    lowered = fn.lower(*args)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    mf = costmodel.model_flops(cfg, shape)
+    report = roofline.analyze(
+        arch=arch, shape=shape_name, mesh_name=mesh_kind, chips=chips,
+        cost_analysis=cost, hlo_text=hlo, memory_analysis=mem,
+        model_flops=mf, target=hal.TPU_V5E)
+    # analytic terms (primary magnitudes: XLA counts while-loop bodies once)
+    terms = analytic.analyze_cell(cfg, shape, analytic.mesh_of(mesh_kind),
+                                  seq_parallel_residuals=cfg.seq_shard)
+    tsec = terms.seconds(hal.TPU_V5E)
+
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "overrides": overrides, "status": "OK", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            k: int(getattr(mem, k, 0) or 0)
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+        },
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "roofline": report.row(),
+        "analytic": {
+            "flops_per_chip": terms.flops_per_chip,
+            "hbm_bytes_per_chip": terms.hbm_bytes_per_chip,
+            "coll_bytes_per_chip": terms.coll_bytes_per_chip,
+            **{k: round(v, 6) for k, v in tsec.items()},
+            "dominant": terms.dominant(hal.TPU_V5E),
+            "detail": {k: float(v) for k, v in terms.detail.items()},
+        },
+        "collectives": dict(report.collectives),
+        "model_flops": mf,
+        "params_total": costmodel.param_count(cfg),
+        "params_active": costmodel.active_param_count(cfg),
+        "hlo_lines": hlo.count("\n"),
+    }
+    return out
+
+
+def cell_list() -> list[tuple[str, str, str]]:
+    cells = []
+    for arch in configs.ARCH_NAMES:
+        for shape in configs.SHAPES:
+            for mesh in ("pod", "multipod"):
+                cells.append((arch, shape, mesh))
+    return cells
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(configs.SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--override", default="",
+                    help="cfg overrides, e.g. seq_shard=True,remat=dots")
+    ap.add_argument("--tag", default="", help="suffix for the report file")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=REPORT_DIR)
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells that already have a report")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        failures = 0
+        for arch, shape, mesh in cell_list():
+            tag = f"{arch}__{shape}__{mesh}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"cached  {tag}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--out", args.out]
+            t0 = time.perf_counter()
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env={**os.environ,
+                                    "PYTHONPATH": os.environ.get("PYTHONPATH", "src")})
+            dt = time.perf_counter() - t0
+            if r.returncode == 0:
+                print(f"ok      {tag}  ({dt:.0f}s)")
+            else:
+                failures += 1
+                print(f"FAIL    {tag}  ({dt:.0f}s)\n{r.stderr[-2000:]}")
+        return failures
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    result = run_cell(args.arch, args.shape, args.mesh, args.override)
+    tag = f"{args.arch}__{args.shape}__{args.mesh}"
+    if args.tag:
+        tag += f"__{args.tag}"
+    path = os.path.join(args.out, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    status = result["status"]
+    print(f"{status}: {tag}")
+    if status == "OK":
+        r = result["roofline"]
+        print(f"  chips={result['chips']} compile={result['compile_s']}s "
+              f"hlo_flops/chip={r['hlo_flops_per_chip']:.3e} "
+              f"bytes/chip={r['hlo_bytes_per_chip']:.3e} "
+              f"coll/chip={r['coll_bytes_per_chip']:.3e}")
+        print(f"  artifact terms: compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+              f"collective={r['collective_s']:.4f}s dominant={r['dominant']}")
+        a = result["analytic"]
+        print(f"  analytic terms: compute={a['compute_s']:.4f}s memory={a['memory_s']:.4f}s "
+              f"collective={a['collective_s']:.4f}s dominant={a['dominant']}")
+        print(f"  peak_mem={r['peak_mem_gb']:.2f} GB/chip "
+              f"useful_ratio={r['useful_ratio']:.3f} "
+              f"roofline_fraction={r['roofline_fraction']:.3f}")
+    elif status == "SKIP":
+        print(f"  reason: {result['reason']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any device query).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Under the dry-run's 512 forced host devices, the single-pod mesh takes
+    the first 256 (one pod's worth)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == need:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before importing jax (see launch/dryrun.py)")
+    return Mesh(np.asarray(devices[:need]).reshape(shape), axes)
+
+
+def make_host_mesh(model_parallel: int | None = None) -> Mesh:
+    """Whatever this host has (tests / examples): (data, model)."""
+    n = len(jax.devices())
+    if model_parallel is None:
+        model_parallel = 2 if n % 2 == 0 and n > 1 else 1
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

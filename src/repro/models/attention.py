@@ -1,0 +1,479 @@
+"""Attention: GQA (full/causal/sliding-window), MLA, KV caches, decode steps.
+
+Three compute paths:
+  * `chunked_attention` — double-blocked online-softmax attention in pure
+    jax.lax (flash-style): Q blocks x KV blocks with running (max, denom,
+    acc) carried through a scan. This keeps the live working set to one
+    (q_block x kv_block) score tile — the paper's working-set rule (§9.2)
+    applied to the TPU: never materialize an (S x S) score matrix. The Pallas
+    `kernels/flash` kernel is the TPU-optimized form; this is the portable
+    default the dry-run lowers.
+  * decode: one-token attention against a (possibly rolling-window) cache.
+  * MLA (DeepSeek): latent KV cache; prefill expands from the latent, decode
+    uses the absorbed-matmul form so per-step work is O(S * (kv_lora + rope))
+    instead of O(S * H * dh).
+
+Caches are plain pytrees so they donate cleanly (the paper's resident-state
+rule, §2.6: the held tensor never re-crosses the host boundary).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, apply_rope, dot, einsum32, rms_head_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> Params:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 8)
+    std = d ** -0.5
+    if cfg.use_mla and not cross:
+        qk_head = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p = {
+            "wq_a": jax.random.normal(ks[0], (d, cfg.q_lora_rank), dtype) * std,
+            "q_norm": jnp.ones((cfg.q_lora_rank,), jnp.float32),
+            "wq_b": jax.random.normal(
+                ks[1], (cfg.q_lora_rank, h, qk_head), dtype) * cfg.q_lora_rank ** -0.5,
+            "wkv_a": jax.random.normal(
+                ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), dtype) * std,
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), jnp.float32),
+            "wkv_b": jax.random.normal(
+                ks[3], (cfg.kv_lora_rank, h, cfg.qk_nope_dim + cfg.v_head_dim),
+                dtype) * cfg.kv_lora_rank ** -0.5,
+            "wo": jax.random.normal(
+                ks[4], (h, cfg.v_head_dim, d), dtype) * (h * cfg.v_head_dim) ** -0.5,
+        }
+        return p
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h, dh), dtype) * std,
+        "wk": jax.random.normal(ks[1], (d, kv, dh), dtype) * std,
+        "wv": jax.random.normal(ks[2], (d, kv, dh), dtype) * std,
+        "wo": jax.random.normal(ks[3], (h, dh, d), dtype) * (h * dh) ** -0.5,
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((kv, dh), dtype)
+        p["bv"] = jnp.zeros((kv, dh), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((dh,), jnp.float32)
+        p["k_scale"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocked online-softmax attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _mask_for(qpos, kpos, causal, window, skv):
+    allow = kpos[None, :] <= qpos[:, None] if causal else \
+        jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if window is not None:
+        allow &= (qpos[:, None] - kpos[None, :]) < window
+    allow &= (kpos < skv)[None, :]
+    return allow
+
+
+def _attn_fwd_impl(q, k, v, causal, window, q_offset, q_chunk, kv_chunk,
+                   scale, skv):
+    """Returns (out (B,Sq_pad,KV,G,dh), lse (B,Sq_pad,KV,G)) — the flash
+    forward; lse is the per-row log-sum-exp the backward needs."""
+    b, sq_pad, kvh, g, dh = q.shape
+    nq = sq_pad // q_chunk
+    nk = k.shape[1] // kv_chunk
+    qb = q.reshape(b, nq, q_chunk, kvh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(b, nk, kv_chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, kv_chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(nq * q_chunk).reshape(nq, q_chunk)
+    k_pos = jnp.arange(nk * kv_chunk).reshape(nk, kv_chunk)
+
+    def q_step(_, qi):
+        qblk, qpos = qi
+        m0 = jnp.full((b, q_chunk, kvh, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, kvh, g), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, kvh, g, dh), jnp.float32)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kpos = ki
+            s = jnp.einsum("bqkgd,bckd->bqkgc", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            allow = _mask_for(qpos, kpos, causal, window, skv)
+            s = jnp.where(allow[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, k_pos))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out.astype(q.dtype), lse)
+
+    _, (blocks, lses) = jax.lax.scan(q_step, None, (qb, q_pos))
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, kvh, g, dh)
+    lse = lses.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_chunk, kvh, g)
+    return out, lse
+
+
+def _attn_bwd_impl(q, k, v, out, lse, dout, causal, window, q_offset,
+                   q_chunk, kv_chunk, scale, skv):
+    """Flash-style backward: recomputes each (q,kv) tile from (q,k,v,lse);
+    nothing quadratic is ever saved. dk/dv accumulate into full-size carries
+    updated slice-by-slice."""
+    b, sq_pad, kvh, g, dh = q.shape
+    nq = sq_pad // q_chunk
+    nk = k.shape[1] // kv_chunk
+    qb = q.reshape(b, nq, q_chunk, kvh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    ob = out.reshape(b, nq, q_chunk, kvh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    dob = dout.reshape(b, nq, q_chunk, kvh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    lseb = lse.reshape(b, nq, q_chunk, kvh, g).transpose(1, 0, 2, 3, 4)
+    kb = k.reshape(b, nk, kv_chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, kv_chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(nq * q_chunk).reshape(nq, q_chunk)
+    k_pos = jnp.arange(nk * kv_chunk).reshape(nk, kv_chunk)
+
+    dk0 = jnp.zeros((nk, b, kv_chunk, kvh, dh), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+
+    def q_step(carry, qi):
+        dk_all, dv_all = carry
+        qblk, oblk, doblk, lseblk, qpos = qi
+        q32 = qblk.astype(jnp.float32)
+        do32 = doblk.astype(jnp.float32)
+        # D_i = rowsum(dO * O)
+        delta = jnp.sum(do32 * oblk.astype(jnp.float32), axis=-1)  # (b,qc,kv,g)
+
+        def kv_step(inner, ki_idx):
+            dq_acc, dk_all, dv_all = inner
+            kblk = kb[ki_idx]
+            vblk = vb[ki_idx]
+            kpos = k_pos[ki_idx]
+            k32 = kblk.astype(jnp.float32)
+            v32 = vblk.astype(jnp.float32)
+            s = jnp.einsum("bqkgd,bckd->bqkgc", q32, k32) * scale
+            allow = _mask_for(qpos, kpos, causal, window, skv)
+            s = jnp.where(allow[None, :, None, None, :], s, NEG_INF)
+            p = jnp.exp(s - lseblk[..., None])                    # (b,qc,kv,g,c)
+            dv_blk = jnp.einsum("bqkgc,bqkgd->bckd", p, do32)
+            dp = jnp.einsum("bqkgd,bckd->bqkgc", do32, v32)
+            ds = p * (dp - delta[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bqkgc,bckd->bqkgd", ds, k32)
+            dk_blk = jnp.einsum("bqkgc,bqkgd->bckd", ds, q32)
+            dk_all = dk_all.at[ki_idx].add(dk_blk)
+            dv_all = dv_all.at[ki_idx].add(dv_blk)
+            return (dq_acc, dk_all, dv_all), None
+
+        dq0 = jnp.zeros((b, q_chunk, kvh, g, dh), jnp.float32)
+        (dq, dk_all, dv_all), _ = jax.lax.scan(
+            kv_step, (dq0, dk_all, dv_all), jnp.arange(nk))
+        return (dk_all, dv_all), dq
+
+    (dk_all, dv_all), dqs = jax.lax.scan(
+        q_step, (dk0, dv0), (qb, ob, dob, lseb, q_pos))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_pad, kvh, g, dh)
+    dk = dk_all.transpose(1, 0, 2, 3, 4).reshape(b, nk * kv_chunk, kvh, dh)
+    dv = dv_all.transpose(1, 0, 2, 3, 4).reshape(b, nk * kv_chunk, kvh, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _attn_core(q, k, v, causal, window, q_offset, q_chunk, kv_chunk, scale,
+               skv):
+    out, _ = _attn_fwd_impl(q, k, v, causal, window, q_offset, q_chunk,
+                            kv_chunk, scale, skv)
+    return out
+
+
+def _attn_core_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk,
+                   scale, skv):
+    out, lse = _attn_fwd_impl(q, k, v, causal, window, q_offset, q_chunk,
+                              kv_chunk, scale, skv)
+    return out, (q, k, v, out, lse)
+
+
+def _attn_core_bwd(causal, window, q_offset, q_chunk, kv_chunk, scale, skv,
+                   res, dout):
+    q, k, v, out, lse = res
+    return _attn_bwd_impl(q, k, v, out, lse, dout, causal, window, q_offset,
+                          q_chunk, kv_chunk, scale, skv)
+
+
+_attn_core.defvjp(_attn_core_fwd, _attn_core_bwd)
+
+
+def chunked_attention(
+    q: jnp.ndarray,            # (B, Sq, H, dh)
+    k: jnp.ndarray,            # (B, Skv, KV, dh)
+    v: jnp.ndarray,            # (B, Skv, KV, dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Flash-style attention: the score tile is the only live buffer, in the
+    forward AND the backward (custom_vjp recomputes tiles from (q,k,v,lse)
+    rather than letting scan save per-step quadratic residuals)."""
+    b, sq, h, dh = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale = scale if scale is not None else dh ** -0.5
+    q_chunk = min(q_chunk, max(sq, 1))
+    kv_chunk = min(kv_chunk, max(skv, 1))
+
+    qp = _pad_to(q, 1, q_chunk).reshape(b, -1, kvh, g, dh)
+    kp = _pad_to(k, 1, kv_chunk)
+    vp = _pad_to(v, 1, kv_chunk)
+    out = _attn_core(qp, kp, vp, causal, window, q_offset, q_chunk, kv_chunk,
+                     scale, skv)
+    return out.reshape(b, -1, h, dh)[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# GQA forward: train / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    """One layer's cache. Sliding-window layers keep a rolling buffer of the
+    window only (this is what makes the hybrid sub-quadratic at 500k)."""
+    size = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    if cfg.use_mla:
+        return {
+            "c_kv": jnp.zeros((batch, size, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, size, cfg.qk_rope_dim), dtype),
+            "pos": jnp.full((batch, size), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.d_head), dtype),
+        "pos": jnp.full((batch, size), -1, jnp.int32),
+    }
+
+
+def _qkv(cfg: ModelConfig, p: Params, x: jnp.ndarray, positions: jnp.ndarray):
+    q = einsum32("bsd,dhk->bshk", x, p["wq"])
+    k = einsum32("bsd,dhk->bshk", x, p["wk"])
+    v = einsum32("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_scale"])
+        k = rms_head_norm(k, p["k_scale"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,               # (B, S, D)
+    positions: jnp.ndarray,       # (B, S) absolute positions
+    *,
+    mode: str = "train",          # train | prefill | decode
+    cache: Params | None = None,
+) -> tuple[jnp.ndarray, Params | None]:
+    if cfg.use_mla:
+        return _mla_forward(cfg, p, x, positions, mode=mode, cache=cache)
+    b, s, _ = x.shape
+    q, k, v = _qkv(cfg, p, x, positions)
+
+    if mode in ("train", "prefill"):
+        out = chunked_attention(q, k, v, causal=True, window=cfg.attn_window)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = _write_prefill_cache(cfg, k, v, positions)
+    else:  # decode: s == 1
+        assert cache is not None
+        cache = _append_cache(cfg, cache, {"k": k, "v": v}, positions)
+        out = _decode_attention(cfg, q, cache, positions)
+        new_cache = cache
+    out = einsum32("bshk,hkd->bsd", out, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"].astype(out.dtype)
+    return out, new_cache
+
+
+def _write_prefill_cache(cfg, k, v, positions):
+    b, s = positions.shape
+    if cfg.attn_window and s > cfg.attn_window:
+        w = cfg.attn_window
+        k, v, positions = k[:, -w:], v[:, -w:], positions[:, -w:]
+        # ring-buffer invariant: position p lives at slot p % w, so decode's
+        # next write (pos s -> slot s % w) replaces the OLDEST entry
+        shift = (s - w) % w
+        k = jnp.roll(k, shift, axis=1)
+        v = jnp.roll(v, shift, axis=1)
+        positions = jnp.roll(positions, shift, axis=1)
+    return {"k": k, "v": v, "pos": positions}
+
+
+def _append_cache(cfg, cache, kv_new, positions):
+    """Write the new token at slot pos % size (rolling for window layers)."""
+    size = cache["pos"].shape[1]
+    pos = positions[:, 0]                       # (B,)
+    slot = pos % size
+    bidx = jnp.arange(pos.shape[0])
+    out = dict(cache)
+    for name in kv_new:
+        out[name] = cache[name].at[bidx, slot].set(
+            kv_new[name][:, 0].astype(cache[name].dtype))
+    out["pos"] = cache["pos"].at[bidx, slot].set(pos)
+    return out
+
+
+def _decode_attention(cfg, q, cache, positions):
+    """q: (B, 1, H, dh) against cache (B, Smax, KV, dh) with validity mask."""
+    b, _, h, dh = q.shape
+    kvh = cache["k"].shape[2]
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, dh)
+    s = jnp.einsum("bqkgd,bckd->bkgc", qg.astype(jnp.float32),
+                   cache["k"].astype(jnp.float32)) * dh ** -0.5
+    cur = positions[:, 0][:, None]              # (B,1)
+    valid = (cache["pos"] >= 0) & (cache["pos"] <= cur)
+    if cfg.attn_window:
+        valid &= (cur - cache["pos"]) < cfg.attn_window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", w, cache["v"].astype(jnp.float32))
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): latent cache, absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def _mla_qkv_latent(cfg, p, x, positions):
+    from repro.models.layers import rms_head_norm as _rms  # noqa: F401
+
+    b, s, _ = x.shape
+    cq = dot(x, p["wq_a"])
+    cq = rms_head_norm(cq, p["q_norm"])
+    q = einsum32("bsl,lhk->bshk", cq, p["wq_b"])            # (B,S,H,nope+rope)
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    ckv_full = dot(x, p["wkv_a"])                           # (B,S,lora+rope)
+    c_kv = rms_head_norm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(ckv_full[..., None, cfg.kv_lora_rank:],
+                        positions, cfg.rope_theta)[..., 0, :]   # (B,S,rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_forward(cfg, p, x, positions, *, mode, cache):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_latent(cfg, p, x, positions)
+
+    if mode in ("train", "prefill"):
+        # expand k,v from the latent; standard attention over full heads
+        kv = einsum32("bsl,lhm->bshm", c_kv, p["wkv_b"])
+        k_nope = kv[..., : cfg.qk_nope_dim]
+        v = kv[..., cfg.qk_nope_dim:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, cfg.qk_rope_dim))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                            (0, k.shape[-1] - v.shape[-1])))
+        out = chunked_attention(q, k, v_pad, causal=True, scale=scale)
+        out = out[..., : cfg.v_head_dim]
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"c_kv": c_kv, "k_rope": k_rope, "pos": positions}
+    else:
+        assert cache is not None
+        size = cache["pos"].shape[1]
+        pos = positions[:, 0]
+        slot = pos % size
+        bidx = jnp.arange(b)
+        cache = dict(cache)
+        cache["c_kv"] = cache["c_kv"].at[bidx, slot].set(
+            c_kv[:, 0].astype(cache["c_kv"].dtype))
+        cache["k_rope"] = cache["k_rope"].at[bidx, slot].set(
+            k_rope[:, 0].astype(cache["k_rope"].dtype))
+        cache["pos"] = cache["pos"].at[bidx, slot].set(pos)
+        # absorbed decode: scores in latent space (paper-grade MLA serving)
+        w_k = p["wkv_b"][..., : cfg.qk_nope_dim]            # (L, H, nope)
+        w_v = p["wkv_b"][..., cfg.qk_nope_dim:]             # (L, H, v)
+        q_lat = einsum32("bqhn,lhn->bqhl", q_nope, w_k)     # (B,1,H,L)
+        s_lat = jnp.einsum("bqhl,bcl->bhc", q_lat.astype(jnp.float32),
+                           cache["c_kv"].astype(jnp.float32))
+        s_rope = jnp.einsum("bqhr,bcr->bhc", q_rope.astype(jnp.float32),
+                            cache["k_rope"].astype(jnp.float32))
+        sc = (s_lat + s_rope) * scale
+        valid = (cache["pos"] >= 0) & (cache["pos"] <= pos[:, None])
+        sc = jnp.where(valid[:, None, :], sc, NEG_INF)
+        w = jax.nn.softmax(sc, axis=-1)
+        ctx = jnp.einsum("bhc,bcl->bhl", w,
+                         cache["c_kv"].astype(jnp.float32)).astype(x.dtype)
+        out = einsum32("bhl,lhv->bhv", ctx, w_v)[:, None]   # (B,1,H,v)
+        new_cache = cache
+    out = einsum32("bshv,hvd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,               # decoder stream (B, S, D)
+    enc_kv: tuple[jnp.ndarray, jnp.ndarray],   # precomputed (k, v) from encoder
+) -> jnp.ndarray:
+    q = einsum32("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    k, v = enc_kv
+    out = chunked_attention(q, k, v, causal=False)
+    out = einsum32("bshk,hkd->bsd", out, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"].astype(out.dtype)
+    return out
+
+
+def encode_cross_kv(cfg: ModelConfig, p: Params, enc_out: jnp.ndarray):
+    k = einsum32("bsd,dhk->bshk", enc_out, p["wk"])
+    v = einsum32("bsd,dhk->bshk", enc_out, p["wv"])
+    if "bk" in p:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return k, v

@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+The real-gated linear recurrent unit:
+
+    r_t = sigmoid(W_r x_t)          (recurrence gate)
+    i_t = sigmoid(W_i x_t)          (input gate)
+    a_t = a ^ (c * r_t)             with a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill: `associative_scan` over the sequence (log-depth — the diagonal
+recurrence is exactly the associative form). Decode: O(1) update; together
+with the sliding-window attention blocks this makes the hybrid sub-quadratic
+(the `long_500k` cell).
+
+Block structure (Griffin residual block): temporal conv1d -> RG-LRU on one
+branch, gelu gate on the other, merged by an output projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dot
+from repro.models.ssm import _causal_conv
+
+_C = 8.0
+_LOG2 = 0.6931471805599453
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> Params:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    # Lambda init so a = sigmoid(Lambda) in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    return {
+        "linear_x": jax.random.normal(ks[1], (d, w), dtype) * std,
+        "linear_y": jax.random.normal(ks[2], (d, w), dtype) * std,
+        "conv_w": jax.random.normal(ks[3], (4, w), dtype) * 0.5,
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": jax.random.normal(ks[4], (w, w), dtype) * w ** -0.5,
+        "w_i": jax.random.normal(ks[5], (w, w), dtype) * w ** -0.5,
+        "lam": jnp.log(u) - jnp.log1p(-u),
+        "out": jax.random.normal(jax.random.fold_in(key, 9), (w, d), dtype)
+               * w ** -0.5,
+    }
+
+
+def _gates(p: Params, xi: jnp.ndarray):
+    r = jax.nn.sigmoid(dot(xi, p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(dot(xi, p["w_i"]).astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(p["lam"])            # log a, negative
+    log_a = _C * r * log_a_base                          # (…, w)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * xi.astype(jnp.float32)
+
+
+def rglru_forward(
+    cfg: ModelConfig,
+    p: Params,
+    xin: jnp.ndarray,             # (B, S, D)
+    *,
+    mode: str = "train",
+    cache: Params | None = None,
+) -> tuple[jnp.ndarray, Params | None]:
+    bsz, s, _ = xin.shape
+    gate = jax.nn.gelu(dot(xin, p["linear_y"]))
+    xi = dot(xin, p["linear_x"])
+
+    if mode in ("train", "prefill"):
+        xi, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"])
+        a, b = _gates(p, xi)                              # (B,S,w) each
+        # h_t = a_t h_{t-1} + b_t  — diagonal linear recurrence
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"h": h[:, -1].astype(xin.dtype), "conv": conv_state}
+    else:  # decode
+        assert cache is not None
+        xi, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"],
+                                      state=cache["conv"])
+        a, b = _gates(p, xi)                              # (B,1,w)
+        h = a[:, 0] * cache["h"].astype(jnp.float32) + b[:, 0]
+        new_cache = {"h": h.astype(xin.dtype), "conv": conv_state}
+        h = h[:, None]
+    out = dot((h.astype(xin.dtype) * gate), p["out"])
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), dtype),
+        "conv": jnp.zeros((batch, 3, cfg.lru_width), dtype),
+    }

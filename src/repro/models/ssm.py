@@ -1,0 +1,241 @@
+"""Mamba-2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Train/prefill: the chunked SSD algorithm — intra-chunk "attention-like"
+quadratic block + inter-chunk state recurrence. The cross-chunk recurrence is
+a scalar-decay linear recurrence, so we run it as `associative_scan`
+(log-depth on TPU rather than sequential — a TPU-native choice the original
+CUDA kernel makes differently).
+
+Decode: O(1) per token — the recurrent state update. This is what makes
+`long_500k` a running cell for this family.
+
+Layout: x (B, L, H, P) head values; B̃/C̃ (B, L, G, N) with G groups broadcast
+over heads; A (H,) negative reals; dt (B, L, H) softplus-positive.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dot
+
+# ---------------------------------------------------------------------------
+
+
+def tp_row_dot(x, w, ctx):
+    """Row-parallel matmul with the cross-shard reduction in bf16.
+
+    Under plain GSPMD the psum of a row-parallel contraction happens on the
+    fp32 accumulator (4-byte all-reduce). Here the per-shard contraction
+    keeps its wide accumulator, converts to bf16, and THEN reduces — halving
+    the dominant TP collective's bytes at the cost of one extra bf16
+    rounding on a 16-way sum (§Perf pair C). Falls back to `dot` off-mesh."""
+    batch_shards = 1
+    if ctx is not None:
+        for a in ("pod", "data"):
+            batch_shards *= ctx.axis_size(a)
+    if ctx is None or not ctx.active or ctx.axis_size("model") <= 1 \
+            or x.shape[-1] % ctx.axis_size("model") != 0 \
+            or x.shape[0] % batch_shards != 0:
+        return dot(x, w)
+    from jax.experimental.shard_map import shard_map
+
+    def body(xb, wb):
+        out = jax.lax.dot_general(xb, wb, (((xb.ndim - 1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        out = out.astype(x.dtype)            # narrow BEFORE the wire
+        return jax.lax.psum(out, "model")
+
+    return shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(ctx.spec(("pod", "data"), None, "model"),
+                  ctx.spec("model", None)),
+        out_specs=ctx.spec(("pod", "data"), None, None),
+        check_rep=False,
+    )(x, w)
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> Params:
+    """Projections kept as separate tensors (w_z, w_x, w_b, w_c, w_dt) rather
+    than one fused in_proj, so tensor parallelism shards d_inner/heads over
+    the 'model' axis cleanly (a fused projection would slice across component
+    boundaries under TP)."""
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    std = d ** -0.5
+    return {
+        "w_z": jax.random.normal(ks[0], (d, di), dtype) * std,
+        "w_x": jax.random.normal(ks[1], (d, di), dtype) * std,
+        "w_b": jax.random.normal(ks[2], (d, g * n), dtype) * std,
+        "w_c": jax.random.normal(ks[3], (d, g * n), dtype) * std,
+        "w_dt": jax.random.normal(ks[4], (d, h), dtype) * std,
+        "conv_x_w": jax.random.normal(ks[5], (cfg.ssm_conv_width, di), dtype) * 0.5,
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": jax.random.normal(ks[6], (cfg.ssm_conv_width, 2 * g * n),
+                                       dtype) * 0.5,
+        "conv_bc_b": jnp.zeros((2 * g * n,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[7], (h,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(
+            jax.random.fold_in(key, 11), (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv, width W. xbc: (B, L, C); w: (W, C).
+
+    Returns (out, new_state) where state carries the last W-1 inputs."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(width):
+        out = out + full[:, i: i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_state = full[:, -(width - 1):] if width > 1 else pad
+    return jax.nn.silu(out).astype(xbc.dtype), new_state
+
+
+def _ssd_chunked(x, dt, a, b, c, chunk, init_state=None):
+    """The SSD algorithm. x:(B,L,H,P) dt:(B,L,H) a:(H,) b,c:(B,L,G,N).
+
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+
+    Structured as a `lax.scan` over chunks carrying the (B,H,P,N) state so
+    the only quadratic live buffer is one chunk's (B,Q,Q,H) decay tile —
+    the paper's working-set rule (§9.2) applied to SSD: never materialize
+    the per-chunk quadratics for all chunks at once.
+    """
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+    rep = h // g
+    # (nc, B, Q, ...) chunk-major for the scan
+    xc = jnp.moveaxis(x.reshape(bsz, nc, q, h, p), 1, 0).astype(jnp.float32)
+    dtc = jnp.moveaxis(dt.reshape(bsz, nc, q, h), 1, 0).astype(jnp.float32)
+    bc = jnp.moveaxis(
+        jnp.repeat(b.reshape(bsz, nc, q, g, n), rep, axis=3), 1, 0).astype(jnp.float32)
+    cc = jnp.moveaxis(
+        jnp.repeat(c.reshape(bsz, nc, q, g, n), rep, axis=3), 1, 0).astype(jnp.float32)
+
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inputs):
+        xz, dtz, bz, cz = inputs                   # (B,Q,H,P) (B,Q,H) (B,Q,H,N)x2
+        da = dtz * a                               # (B,Q,H), negative
+        da_cs = jnp.cumsum(da, axis=1)
+        # intra-chunk quadratic
+        seg = da_cs[:, :, None, :] - da_cs[:, None, :, :]        # (B,Q,Q,H)
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bqhn,bkhn->bqkh", cz, bz) * decay
+        y = jnp.einsum("bqkh,bkh,bkhp->bqhp", scores, dtz, xz)
+        # contribution of the entering state
+        decay_from_start = jnp.exp(da_cs)                        # (B,Q,H)
+        y = y + jnp.einsum("bqhn,bhpn,bqh->bqhp", cz, state, decay_from_start)
+        # state update to the chunk end
+        decay_to_end = jnp.exp(da_cs[:, -1:, :] - da_cs)         # (B,Q,H)
+        inc = jnp.einsum("bkh,bkh,bkhn,bkhp->bhpn", decay_to_end, dtz, bz, xz)
+        chunk_decay = jnp.exp(da_cs[:, -1, :])                   # (B,H)
+        state = state * chunk_decay[..., None, None] + inc
+        return state, y
+
+    # checkpoint the chunk step: its backward recomputes the (B,Q,Q,H)
+    # quadratics per chunk instead of letting scan save them for all chunks
+    final_state, ys = jax.lax.scan(jax.checkpoint(step), init_state,
+                                   (xc, dtc, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * q, h, p)[:, :l]
+    return y, final_state
+
+
+def ssm_forward(
+    cfg: ModelConfig,
+    p: Params,
+    xin: jnp.ndarray,              # (B, S, D)
+    *,
+    mode: str = "train",
+    cache: Params | None = None,
+    ctx=None,
+) -> tuple[jnp.ndarray, Params | None]:
+    bsz, s, _ = xin.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+    z = dot(xin, p["w_z"])
+    xs = dot(xin, p["w_x"])
+    bc = jnp.concatenate([dot(xin, p["w_b"]), dot(xin, p["w_c"])], axis=-1)
+    dt = dot(xin, p["w_dt"])
+    a = -jnp.exp(p["a_log"])                                     # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    if mode in ("train", "prefill"):
+        xs, conv_x_state = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"])
+        bc, conv_bc_state = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+        x = xs.reshape(bsz, s, h, pdim)
+        b = bc[..., : g * n].reshape(bsz, s, g, n)
+        c = bc[..., g * n:].reshape(bsz, s, g, n)
+        y, state = _ssd_chunked(x, dt, a, b, c, cfg.ssm_chunk)
+        y = y + x.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"state": state.astype(xin.dtype),
+                         "conv_x": conv_x_state, "conv_bc": conv_bc_state}
+    else:  # decode: s == 1, O(1) state update
+        assert cache is not None
+        xs, conv_x_state = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"],
+                                        state=cache["conv_x"])
+        bc, conv_bc_state = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"],
+                                         state=cache["conv_bc"])
+        x = xs.reshape(bsz, 1, h, pdim)[:, 0]                     # (B,H,P)
+        b = bc[..., : g * n].reshape(bsz, g, n)
+        c = bc[..., g * n:].reshape(bsz, g, n)
+        rep = h // g
+        bh = jnp.repeat(b, rep, axis=1).astype(jnp.float32)       # (B,H,N)
+        ch = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+        dt1 = dt[:, 0]                                            # (B,H)
+        decay = jnp.exp(dt1 * a)                                  # (B,H)
+        state = cache["state"].astype(jnp.float32)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt1, bh, x.astype(jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", ch, state)
+        y = y + x.astype(jnp.float32) * p["d_skip"][:, None]
+        y = y[:, None]                                            # (B,1,H,P)
+        new_cache = {"state": state.astype(xin.dtype),
+                     "conv_x": conv_x_state, "conv_bc": conv_bc_state}
+
+    # gated RMS norm + out projection
+    y = y.reshape(bsz, -1, di)
+    gated = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = (gated * gated).mean(-1, keepdims=True)
+    y = (gated * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"]).astype(xin.dtype)
+    return tp_row_dot(y, p["out_proj"], ctx), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), dtype),
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.d_inner),
+                            dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                              2 * cfg.ssm_groups * cfg.ssm_state), dtype),
+    }

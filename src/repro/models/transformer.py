@@ -1,0 +1,239 @@
+"""Decoder assembly: residual blocks, scan-over-layers, remat, caches.
+
+Layers are grouped by structural signature (temporal-mixing kind x MoE-ness)
+and each group runs as one `lax.scan` over stacked parameters — the
+compile-once discipline (paper ch. 2) applied to HLO size: a 61-layer model
+lowers to one layer body walked 61 times, exactly the "walked graph" shape
+the engine executes, and what keeps the 512-device dry-run compilable.
+
+Remat policy per config: "full" (save only layer boundaries), "dots"
+(save matmul outputs), "none".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import Params, apply_mlp, apply_norm, init_mlp, init_norm
+from repro.parallel.ctx import ParallelContext
+
+# ---------------------------------------------------------------------------
+# One residual block
+# ---------------------------------------------------------------------------
+
+
+def layer_signature(cfg: ModelConfig, idx: int) -> tuple[str, bool]:
+    return (cfg.block_kind(idx), cfg.layer_is_moe(idx))
+
+
+def init_layer(key, cfg: ModelConfig, sig: tuple[str, bool], dtype) -> Params:
+    kind, is_moe = sig
+    k1, k2, k3, _ = jax.random.split(key, 4)
+    p: Params = {"ln1": init_norm(cfg, cfg.d_model)}
+    if kind == "ssm":
+        p["mix"] = ssm_lib.init_ssm(k1, cfg, dtype)
+        return p  # mamba blocks: norm + mixer only (no separate MLP)
+    p["ln2"] = init_norm(cfg, cfg.d_model)
+    if kind == "rglru":
+        p["mix"] = rglru_lib.init_rglru(k1, cfg, dtype)
+    else:
+        p["mix"] = attn_lib.init_attention(k1, cfg, dtype)
+    if is_moe:
+        p["moe"] = moe_lib.init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k3, cfg, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def apply_layer(
+    cfg: ModelConfig,
+    sig: tuple[str, bool],
+    p: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    ctx: ParallelContext,
+    *,
+    mode: str,
+    cache: Params | None,
+) -> tuple[jnp.ndarray, Params | None, jnp.ndarray]:
+    kind, is_moe = sig
+    seq_axis = "model" if (cfg.seq_shard and mode == "train"
+                           and x.shape[1] % max(ctx.axis_size("model"), 1) == 0) \
+        else None
+    x = ctx.constrain(x, ("pod", "data"), seq_axis, None)
+    aux = jnp.zeros((), jnp.float32)
+
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "ssm":
+        out, new_cache = ssm_lib.ssm_forward(cfg, p["mix"], h, mode=mode,
+                                             cache=cache, ctx=ctx)
+        return x + out, new_cache, aux
+    if kind == "rglru":
+        out, new_cache = rglru_lib.rglru_forward(cfg, p["mix"], h, mode=mode,
+                                                 cache=cache)
+    else:
+        out, new_cache = attn_lib.attention_forward(
+            cfg, p["mix"], h, positions, mode=mode, cache=cache)
+    x = x + out
+
+    h = apply_norm(cfg, p["ln2"], x)
+    if is_moe:
+        out, aux = moe_lib.moe_forward(cfg, p["moe"], h, ctx)
+    else:
+        out = apply_mlp(cfg, p["mlp"], h)
+    return x + out, new_cache, aux
+
+
+def init_layer_cache(cfg: ModelConfig, sig: tuple[str, bool], batch: int,
+                     max_len: int, dtype) -> Params | None:
+    kind, _ = sig
+    if kind == "ssm":
+        return ssm_lib.init_ssm_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return rglru_lib.init_rglru_cache(cfg, batch, dtype)
+    return attn_lib.init_kv_cache(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer groups: (signature tuple, count) runs of identical structure
+# ---------------------------------------------------------------------------
+
+
+def layer_groups(cfg: ModelConfig) -> list[tuple[tuple[tuple[str, bool], ...], int]]:
+    """Group layers into scannable runs. For patterned hybrids the unit is
+    one whole pattern period; for uniform stacks it is a single layer."""
+    if cfg.block_pattern:
+        period = tuple(layer_signature(cfg, i)
+                       for i in range(len(cfg.block_pattern)))
+        n_periods = cfg.n_layers // len(cfg.block_pattern)
+        groups = [(period, n_periods)]
+        rem = cfg.n_layers - n_periods * len(cfg.block_pattern)
+        for i in range(rem):
+            li = n_periods * len(cfg.block_pattern) + i
+            groups.append(((layer_signature(cfg, li),), 1))
+        return groups
+    groups: list[tuple[tuple[tuple[str, bool], ...], int]] = []
+    i = 0
+    while i < cfg.n_layers:
+        sig = layer_signature(cfg, i)
+        j = i
+        while j < cfg.n_layers and layer_signature(cfg, j) == sig:
+            j += 1
+        groups.append((((sig),), j - i))
+        i = j
+    return groups
+
+
+def init_stack(key, cfg: ModelConfig, dtype) -> list[Params]:
+    """One stacked-param pytree per group (leading dim = group length)."""
+    out = []
+    for gi, (sigs, count) in enumerate(layer_groups(cfg)):
+        gkey = jax.random.fold_in(key, gi)
+        keys = jax.random.split(gkey, count)
+
+        def init_unit(k, sigs=sigs):
+            ks = jax.random.split(k, len(sigs))
+            return {f"sub{i}": init_layer(ks[i], cfg, sigs[i], dtype)
+                    for i in range(len(sigs))}
+
+        if count == 1:
+            unit = init_unit(keys[0])
+            out.append(jax.tree.map(lambda a: a[None], unit))
+        else:
+            out.append(jax.vmap(init_unit)(keys))
+    return out
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype) -> list[Params]:
+    out = []
+    for sigs, count in layer_groups(cfg):
+        unit = {f"sub{i}": init_layer_cache(cfg, sigs[i], batch, max_len, dtype)
+                for i in range(len(sigs))}
+        out.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count,) + a.shape).copy(), unit))
+    return out
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+def apply_stack(
+    cfg: ModelConfig,
+    stacks: list[Params],
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    ctx: ParallelContext,
+    *,
+    mode: str,
+    caches: list[Params] | None = None,
+) -> tuple[jnp.ndarray, list[Params] | None, jnp.ndarray]:
+    """Run all layer groups. train: no caches. prefill: builds and returns
+    caches. decode: consumes `caches`, returns the updated ones."""
+    groups = layer_groups(cfg)
+    collect = mode in ("prefill", "decode")
+    new_caches: list[Params] | None = [] if collect else None
+    aux_total = jnp.zeros((), jnp.float32)
+    for gi, (sigs, count) in enumerate(groups):
+        stacked = stacks[gi]
+        gcache = caches[gi] if caches is not None else None
+
+        def unit_fn(x, unit_p, unit_cache, sigs=sigs):
+            aux = jnp.zeros((), jnp.float32)
+            ncache = {}
+            for i, sig in enumerate(sigs):
+                sub = unit_cache[f"sub{i}"] if unit_cache is not None else None
+                x, nc, a = apply_layer(cfg, sig, unit_p[f"sub{i}"], x,
+                                       positions, ctx, mode=mode, cache=sub)
+                aux = aux + a
+                ncache[f"sub{i}"] = nc
+            return x, ncache, aux
+
+        if mode == "train":
+            unit_fn = _remat(unit_fn, cfg.remat)
+
+        if count == 1:
+            unit_p = jax.tree.map(lambda a: a[0], stacked)
+            unit_c = (jax.tree.map(lambda a: a[0], gcache)
+                      if gcache is not None else None)
+            x, ncache, aux = unit_fn(x, unit_p, unit_c)
+            aux_total = aux_total + aux
+            if collect:
+                new_caches.append(jax.tree.map(lambda a: a[None], ncache))
+        elif mode == "train":
+            def body_t(carry, unit_p):
+                y, _, aux = unit_fn(carry, unit_p, None)
+                return y, aux
+            x, auxs = jax.lax.scan(body_t, x, stacked)
+            aux_total = aux_total + auxs.sum()
+        elif mode == "prefill":
+            def body_p(carry, unit_p):
+                y, ncache, aux = unit_fn(carry, unit_p, None)
+                return y, (ncache, aux)
+            x, (ncaches, auxs) = jax.lax.scan(body_p, x, stacked)
+            aux_total = aux_total + auxs.sum()
+            new_caches.append(ncaches)
+        else:  # decode
+            def body_d(carry, xs):
+                unit_p, unit_c = xs
+                y, ncache, aux = unit_fn(carry, unit_p, unit_c)
+                return y, (ncache, aux)
+            x, (ncaches, auxs) = jax.lax.scan(body_d, x, (stacked, gcache))
+            aux_total = aux_total + auxs.sum()
+            new_caches.append(ncaches)
+    return x, new_caches, aux_total

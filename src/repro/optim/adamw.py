@@ -1,0 +1,92 @@
+"""AdamW in pure JAX: decoupled weight decay, cosine schedule, global-norm
+clipping, fp32 master arithmetic over low-precision params.
+
+ZeRO-1 optimizer-state sharding and gradient compression live in their own
+modules (`repro.parallel.sharding`, `repro.optim.compression`) and wrap this
+kernel-simple optimizer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"     # "bfloat16" halves state memory
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine to min_lr_ratio * peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_state(cfg: AdamWConfig, params) -> dict[str, Any]:
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, mdt)  # noqa: E731
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mh = m32 / b1c
+        vh = v32 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, c = upd(p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    new_state = {"step": step,
+                 "m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v)}
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return jax.tree.unflatten(treedef, new_p), new_state, metrics

@@ -1,0 +1,110 @@
+"""Gradient compression for the DP all-reduce: int8 with error feedback.
+
+The paper's weight-compression result — bandwidth, not storage, is what
+compression buys on the direct route (ch. 7) — applied to the *gradient*
+stream of data-parallel training: quantize each gradient leaf to int8 with a
+per-block fp32 scale before it crosses the interconnect, carry the
+quantization residual forward (error feedback, Seide et al. / 1-bit SGD
+lineage), and dequantize after the reduce.
+
+Under `jit`+GSPMD the all-reduce is implicit; this module exposes the
+quantize/dequantize pair and a `compressed_psum` for explicit shard_map
+pipelines, plus the error-feedback wrapper used by the train loop when
+`--grad-compression int8` is set. Bytes crossing the DP boundary drop 4x
+(the collective term of the roofline), at the cost of one extra residual
+buffer — exactly the stream-vs-fold trade of paper ch. 7.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+def _pad_len(n: int) -> int:
+    return (-n) % _BLOCK
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block symmetric int8. Returns (q (N/B, B) int8, scales (N/B,))."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = _pad_len(flat.size)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    shape: tuple[int, ...]) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_grads(grads, residual):
+    """Error-feedback compression of a gradient pytree.
+
+    Returns (compressed_repr, new_residual). compressed_repr round-trips via
+    `decompress_grads`; residual holds what quantization dropped and is added
+    back into the next step's gradients (so the *long-run* update is unbiased
+    even though each step moves 4x fewer bytes)."""
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + (r if r is not None else 0.0)
+        q, s = quantize_int8(g32)
+        back = dequantize_int8(q, s, g.shape)
+        return (q, s), g32 - back
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual) if residual is not None else [None] * len(flat_g)
+    comp, res = [], []
+    for g, r in zip(flat_g, flat_r):
+        c, nr = one(g, r)
+        comp.append(c)
+        res.append(nr)
+    return jax.tree.unflatten(td, comp), jax.tree.unflatten(td, res)
+
+
+def decompress_grads(comp, like):
+    flat_c, _ = jax.tree.flatten(comp, is_leaf=lambda x: isinstance(x, tuple))
+    flat_l, td = jax.tree.flatten(like)
+    out = [dequantize_int8(q, s, l.shape).astype(l.dtype)
+           for (q, s), l in zip(flat_c, flat_l)]
+    return jax.tree.unflatten(td, out)
+
+
+def init_residual(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Explicit compressed all-reduce for shard_map pipelines.
+
+    Two-phase shared-scale scheme: (1) a tiny pmax agrees on one fp32 scale
+    per 256-element block across shards; (2) every shard quantizes against
+    the shared scale and the payload reduces in integer space — exact w.r.t.
+    the quantized values, deterministic, and the wire payload is int8-wide
+    (the int32 psum here models the 8-bit wire; real deployments ship the
+    int8 and widen at the reducer). Bytes on the wire: ~1/4 of fp32."""
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = _pad_len(flat.size)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    local_max = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jnp.maximum(jax.lax.pmax(local_max, axis_name) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    out = (total.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return out[:n].reshape(shape)

@@ -1,0 +1,84 @@
+"""Parallel context: the mesh and axis names threaded through the model.
+
+Axis convention (DESIGN.md §5):
+  * "pod"   — outer data-parallel axis across pods (multi-pod mesh only)
+  * "data"  — data-parallel axis within a pod
+  * "model" — tensor/expert-parallel axis (TP for dense blocks, EP for MoE)
+
+`ParallelContext(mesh=None)` is the single-device mode every smoke test runs
+in: all sharding constraints become no-ops and MoE takes the dense path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    mesh: Mesh | None = None
+    use_ep: bool = True            # expert-parallel MoE (shard_map all_to_all)
+    zero1: bool = True             # shard optimizer state over the data axes
+    remat: str = "full"            # full | dots | none
+
+    # ------------------------------------------------------------------
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None and self.mesh.devices.size > 1
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names) if self.mesh is not None else ()
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        """Axes the global batch shards over (pod+data when present)."""
+        return tuple(a for a in ("pod", "data") if a in self.axis_names)
+
+    @property
+    def model_axis(self) -> str | None:
+        return "model" if "model" in self.axis_names else None
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None or name not in self.axis_names:
+            return 1
+        return self.mesh.shape[name]
+
+    @property
+    def num_devices(self) -> int:
+        return self.mesh.devices.size if self.mesh is not None else 1
+
+    # ------------------------------------------------------------------
+    def spec(self, *axes: str | tuple[str, ...] | None) -> P:
+        """PartitionSpec with axes not present in the mesh dropped."""
+        cleaned = []
+        for a in axes:
+            if a is None:
+                cleaned.append(None)
+            elif isinstance(a, tuple):
+                present = tuple(x for x in a if x in self.axis_names)
+                cleaned.append(present if present else None)
+            else:
+                cleaned.append(a if a in self.axis_names else None)
+        return P(*cleaned)
+
+    def sharding(self, *axes) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*axes))
+
+    def constrain(self, x, *axes):
+        """with_sharding_constraint that degrades to identity off-mesh."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(*axes))
+
+    def divisible(self, n: int, axis: str) -> bool:
+        s = self.axis_size(axis)
+        return s > 1 and n % s == 0
+
+
+CPU_CTX = ParallelContext(mesh=None)

@@ -1,0 +1,83 @@
+"""Ring attention: context-parallel prefill over the 'model' axis.
+
+For prefill lengths where even one sequence's KV does not fit a chip (the
+regime between `prefill_32k` and `long_500k`), the sequence dimension itself
+shards across the mesh: each rank holds an S/m slice of Q, K, V; KV blocks
+rotate around the ring (`ppermute`) while each rank accumulates its local
+queries' online softmax against every block. ICI cost: each KV block
+traverses the ring once — bytes = S·KV·d·2 per rank pair, fully overlappable
+with the block's attention compute on real hardware.
+
+Forward-only by design: this is the serving-prefill path. Training-time
+sequence parallelism uses the GSPMD `seq_shard` route instead (DESIGN §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def ring_attention(
+    q: jnp.ndarray,            # (B, S, H, dh) — S sharded over `axis`
+    k: jnp.ndarray,            # (B, S, KV, dh)
+    v: jnp.ndarray,            # (B, S, KV, dh)
+    mesh: Mesh,
+    *,
+    axis: str = "model",
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    m = mesh.shape[axis]
+    assert s % m == 0, f"seq {s} must divide the {axis} axis ({m})"
+    scale_ = scale if scale is not None else dh ** -0.5
+
+    def body(qb, kb, vb):
+        # local blocks: (B, S/m, ...) on every rank
+        rank = jax.lax.axis_index(axis)
+        s_m = qb.shape[1]
+        q32 = qb.reshape(b, s_m, kvh, g, dh).astype(jnp.float32)
+        q_pos = rank * s_m + jnp.arange(s_m)
+
+        acc0 = jnp.zeros((b, s_m, kvh, g, dh), jnp.float32)
+        m0 = jnp.full((b, s_m, kvh, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, s_m, kvh, g), jnp.float32)
+        perm = [(i, (i + 1) % m) for i in range(m)]
+
+        def step(carry, r):
+            mx, l, acc, kc, vc = carry
+            src = (rank - r) % m                 # origin rank of this block
+            k_pos = src * s_m + jnp.arange(s_m)
+            srt = jnp.einsum("bqkgd,bckd->bqkgc", q32, kc.astype(jnp.float32)) \
+                * scale_
+            if causal:
+                allow = k_pos[None, :] <= q_pos[:, None]
+                srt = jnp.where(allow[None, :, None, None, :], srt, NEG_INF)
+            m_new = jnp.maximum(mx, srt.max(axis=-1))
+            p = jnp.exp(srt - m_new[..., None])
+            corr = jnp.exp(mx - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, vc.astype(jnp.float32))
+            # rotate KV around the ring for the next step
+            kc = jax.lax.ppermute(kc, axis, perm)
+            vc = jax.lax.ppermute(vc, axis, perm)
+            return (m_new, l, acc, kc, vc), None
+
+        (mx, l, acc, _, _), _ = jax.lax.scan(
+            step, (m0, l0, acc0, kb, vb), jnp.arange(m))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.reshape(b, s_m, h, dh).astype(qb.dtype)
+
+    spec = P(None, axis, None, None)
+    return shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+                     out_specs=spec, check_rep=False)(q, k, v)

@@ -1,0 +1,274 @@
+"""Sharding rules: param/cache/optimizer PartitionSpecs per architecture.
+
+Megatron-style TP over the "model" axis, DP over ("pod", "data"), EP for
+expert banks, with two framework rules:
+
+  * divisibility-guarded: a dim that does not divide the axis size
+    replicates instead (e.g. 8 KV heads on a 16-way model axis — the
+    standard duplicate-KV fallback);
+  * ZeRO-1: optimizer moments take the param spec *plus* the data axis on
+    the largest still-unsharded dim, so state memory scales with the fleet.
+
+Rules are path-pattern based over the param pytree, so any new layer that
+follows the naming convention shards without new code.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.parallel.ctx import ParallelContext
+
+# (path regex, dim index -> axis) — dims not listed replicate.
+# Paths look like "layers/0/sub0/mix/wq" after flattening.
+# Two-axis entries are TP ("model") + FSDP ("data"): large weights shard a
+# second dim over the data axis and are all-gathered per scan step (GSPMD
+# inserts the gather inside the loop) — without this, a 671B model's bf16
+# working params alone would be P/model = 85 GB per chip.
+_RULES: list[tuple[str, dict[int, str]]] = [
+    # embeddings: vocab over model only — FSDP on the d_model dim would make
+    # every lookup gather from a 2D-sharded table, which the SPMD partitioner
+    # can only do by replicating the output (involuntary full remat).
+    # Small tables replicate entirely (size gate below): a lookup from a
+    # vocab-sharded table costs one (B,S,D) all-reduce per step, which for a
+    # small-vocab model dwarfs the table's replicated footprint.
+    (r"embed/table$", {0: "model"}),
+    (r"embed/unembed$", {1: "model"}),
+    # attention (leading stack dim shifts indices by +1 when stacked)
+    (r"mix/wq$", {1: "model", 0: "data"}),          # (D, H, dh)
+    (r"mix/wk$", {1: "model", 0: "data"}),
+    (r"mix/wv$", {1: "model", 0: "data"}),
+    (r"mix/wo$", {0: "model", 2: "data"}),          # (H, dh, D)
+    (r"(self_attn|cross_attn|attn)/wq$", {1: "model", 0: "data"}),
+    (r"(self_attn|cross_attn|attn)/wk$", {1: "model", 0: "data"}),
+    (r"(self_attn|cross_attn|attn)/wv$", {1: "model", 0: "data"}),
+    (r"(self_attn|cross_attn|attn)/wo$", {0: "model", 2: "data"}),
+    # MLA
+    (r"mix/wq_a$", {1: "model", 0: "data"}),        # (D, q_lora)
+    (r"mix/wq_b$", {1: "model", 0: "data"}),        # (q_lora, H, qk_head)
+    (r"mix/wkv_a$", {0: "data"}),                   # (D, lora+rope)
+    (r"mix/wkv_b$", {1: "model", 0: "data"}),       # (kv_lora, H, nope+v)
+    # GLU MLPs
+    (r"(mlp|shared)/wg$", {1: "model", 0: "data"}),
+    (r"(mlp|shared)/wu$", {1: "model", 0: "data"}),
+    (r"(mlp|shared)/wd$", {0: "model", 1: "data"}),
+    (r"mlp/wi$", {1: "model", 0: "data"}),
+    (r"mlp/wo$", {0: "model", 1: "data"}),
+    # MoE expert banks: EP over model on the expert dim, FSDP over data
+    (r"moe/wg$", {0: "model", 1: "data"}),          # (E, d, f)
+    (r"moe/wu$", {0: "model", 1: "data"}),
+    (r"moe/wd$", {0: "model", 2: "data"}),
+    # SSM: d_inner / heads over model
+    (r"mix/w_z$", {1: "model", 0: "data"}),
+    (r"mix/w_x$", {1: "model", 0: "data"}),
+    (r"mix/w_dt$", {1: "model", 0: "data"}),
+    (r"mix/(w_b|w_c)$", {0: "data"}),
+    (r"mix/conv_x_w$", {1: "model"}),
+    (r"mix/conv_x_b$", {0: "model"}),
+    (r"mix/(norm_scale)$", {0: "model"}),
+    (r"mix/out_proj$", {0: "model", 1: "data"}),
+    (r"mix/(a_log|d_skip|dt_bias)$", {0: "model"}),
+    # RG-LRU: lru_width over model
+    (r"mix/linear_x$", {1: "model", 0: "data"}),
+    (r"mix/linear_y$", {1: "model", 0: "data"}),
+    (r"mix/w_r$", {1: "model", 0: "data"}),
+    (r"mix/w_i$", {1: "model", 0: "data"}),
+    (r"mix/lam$", {0: "model"}),
+    (r"mix/conv_w$", {1: "model"}),
+    (r"mix/conv_b$", {0: "model"}),
+    (r"mix/out$", {0: "model", 1: "data"}),
+    # MTP projection
+    (r"mtp/proj$", {1: "model", 0: "data"}),
+]
+
+# cache specs: batch over (pod,data); heads/width over model where divisible
+_CACHE_RULES: list[tuple[str, dict[int, Any]]] = [
+    (r"/(k|v)$", {0: ("pod", "data"), 2: "model"}),      # (B,S,KV,dh)
+    (r"/(c_kv|k_rope)$", {0: ("pod", "data")}),          # MLA latents
+    (r"/pos$", {0: ("pod", "data")}),
+    (r"/state$", {0: ("pod", "data"), 1: "model"}),      # SSM (B,H,P,N)
+    (r"/conv_x$", {0: ("pod", "data"), 2: "model"}),
+    (r"/conv_bc$", {0: ("pod", "data")}),
+    (r"/h$", {0: ("pod", "data"), 1: "model"}),          # RG-LRU (B,w)
+    (r"/conv$", {0: ("pod", "data"), 2: "model"}),
+    (r"cross/(k|v)$", {1: ("pod", "data"), 3: "model"}), # (L,B,S,KV,dh)
+]
+
+
+def _flatten_with_paths(tree, prefix="") -> list[tuple[str, Any]]:
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out += _flatten_with_paths(tree[k], f"{prefix}/{k}" if prefix else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out += _flatten_with_paths(v, f"{prefix}/{i}")
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+# FSDP ("data"-axis weight sharding) only pays above this size: below it the
+# whole shard fits trivially in HBM and GSPMD may otherwise choose to
+# contract over the sharded weight dim (an activation-sized all-reduce)
+# instead of gathering the weight.
+FSDP_MIN_ELEMENTS = 32 * 1024 * 1024
+
+# Embedding tables below this replicate rather than shard over 'model': the
+# replicated footprint (<= 400 MB bf16) is cheaper than the per-step (B,S,D)
+# lookup all-reduce a vocab-sharded table forces.
+EMBED_SHARD_MIN_ELEMENTS = 200_000_000
+
+
+def _spec_for(path: str, shape: tuple[int, ...], ctx: ParallelContext,
+              rules, stacked_offset: bool) -> P:
+    ndim = len(shape)
+    n_elements = 1
+    for s in shape:
+        n_elements *= s
+    for pattern, dims in rules:
+        if re.search(pattern, path):
+            # stacked layer params carry a leading layer dim: shift indices
+            offset = 0
+            if stacked_offset and path.startswith("layers/") or \
+               stacked_offset and re.match(r"encdec/(enc|dec)/", path):
+                offset = 1
+            axes: list[Any] = [None] * ndim
+            ok = True
+            for dim, axis in dims.items():
+                d = dim + offset
+                if d >= ndim:
+                    ok = False
+                    break
+                if axis == "data" and n_elements < FSDP_MIN_ELEMENTS:
+                    continue   # FSDP not worth it for small weights
+                if path.endswith("embed/table") \
+                        and n_elements < EMBED_SHARD_MIN_ELEMENTS:
+                    continue   # replicate small embedding tables
+                sizes = 1
+                names = axis if isinstance(axis, tuple) else (axis,)
+                for nm in names:
+                    sizes *= ctx.axis_size(nm)
+                if sizes > 1 and shape[d] % sizes == 0:
+                    axes[d] = axis
+            if ok:
+                return ctx.spec(*axes)
+    return ctx.spec(*([None] * ndim))
+
+
+def param_specs(params, ctx: ParallelContext):
+    """PartitionSpec pytree matching `params` (structure-preserving)."""
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: walk(node[k], f"{prefix}/{k}" if prefix else str(k))
+                    for k in node}
+        if isinstance(node, (list, tuple)):
+            out = [walk(v, f"{prefix}/{i}") for i, v in enumerate(node)]
+            return out if isinstance(node, list) else tuple(out)
+        if node is None:
+            return None
+        return _spec_for(prefix, node.shape, ctx, _RULES, stacked_offset=True)
+    return walk(params)
+
+
+def cache_specs(caches, ctx: ParallelContext, *, seq_fallback: bool = False):
+    """Cache pytree specs: stacked leading layer dim shifts cache rules.
+
+    seq_fallback (context-parallel decode): when the KV-head dim does not
+    divide the model axis (GQA kv < |model|), shard the cache's SEQUENCE dim
+    over 'model' instead — per-token scores/values reduce over the sharded
+    context with two small per-layer all-reduces, and per-chip cache memory
+    drops by |model| (the §Perf lever for memory-dominant decode cells)."""
+    msize = ctx.axis_size("model")
+
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: walk(node[k], f"{prefix}/{k}" if prefix else str(k))
+                    for k in node}
+        if isinstance(node, (list, tuple)):
+            out = [walk(v, f"{prefix}/{i}") for i, v in enumerate(node)]
+            return out if isinstance(node, list) else tuple(out)
+        if node is None:
+            return None
+        shape = node.shape
+        # stacked caches carry a leading layer axis not covered by the rule
+        for pattern, dims in _CACHE_RULES:
+            if re.search(pattern, prefix):
+                for off in (1, 0):   # try stacked first
+                    axes: list[Any] = [None] * len(shape)
+                    fit = True
+                    model_used = False
+                    for dim, axis in dims.items():
+                        d = dim + off
+                        if d >= len(shape):
+                            fit = False
+                            break
+                        sizes = 1
+                        names = axis if isinstance(axis, tuple) else (axis,)
+                        for nm in names:
+                            sizes *= ctx.axis_size(nm)
+                        if sizes > 1 and shape[d] % sizes == 0:
+                            axes[d] = axis
+                            if "model" in names:
+                                model_used = True
+                    if fit:
+                        if (seq_fallback and not model_used and msize > 1
+                                and re.search(r"/(k|v|c_kv|k_rope|pos)$", prefix)):
+                            # sequence dim: dim 1 of the rule frame
+                            d = 1 + off
+                            if d < len(shape) and axes[d] is None \
+                                    and shape[d] % msize == 0:
+                                axes[d] = "model"
+                        return ctx.spec(*axes)
+        return ctx.spec(*([None] * len(shape)))
+    return walk(caches)
+
+
+def batch_specs(batch_like, ctx: ParallelContext):
+    """Input batches shard dim 0 over (pod, data)."""
+    def one(x):
+        if x is None:
+            return None
+        axes = [None] * x.ndim
+        total = 1
+        for a in ctx.batch_axes:
+            total *= ctx.axis_size(a)
+        if total > 1 and x.shape[0] % total == 0:
+            axes[0] = ("pod", "data")
+        return ctx.spec(*axes)
+    return jax.tree.map(one, batch_like,
+                        is_leaf=lambda x: x is None or hasattr(x, "shape"))
+
+
+def opt_state_specs(opt_state, pspecs, ctx: ParallelContext,
+                    zero1: bool = True):
+    """Moments take the param spec; with ZeRO-1 additionally shard the
+    largest unsharded dim over 'data' when divisible."""
+    data_size = ctx.axis_size("data")
+
+    def widen(spec: P, shape) -> P:
+        if not zero1 or data_size <= 1 or spec is None:
+            return spec
+        axes = list(spec) + [None] * (len(shape) - len(spec))
+        flat = [a for ax in axes if ax is not None
+                for a in (ax if isinstance(ax, tuple) else (ax,))]
+        if "data" in flat:          # FSDP params already use the data axis
+            return P(*axes)
+        best, best_dim = -1, -1
+        for i, (a, s) in enumerate(zip(axes, shape)):
+            if a is None and s % data_size == 0 and s > best:
+                best, best_dim = s, i
+        if best_dim >= 0:
+            axes[best_dim] = "data"
+        return P(*axes)
+
+    m_spec = jax.tree.map(widen, pspecs,
+                          jax.tree.map(lambda x: x.shape, opt_state["m"]))
+    v_spec = jax.tree.map(widen, pspecs,
+                          jax.tree.map(lambda x: x.shape, opt_state["v"]))
+    return {"step": ctx.spec(), "m": m_spec, "v": v_spec}

@@ -1,0 +1,257 @@
+"""Core technique modules: capability, segmenter, compression, dispatch,
+roofline — each validated against the paper's corresponding claim."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import (capability, compression as cp, costmodel, dispatch,
+                        hal, roofline, segmenter as sg)
+from repro.core.hal import WeightForm
+
+
+class TestCapability:
+    def test_conv3d_attested_but_unreachable(self):
+        # paper:§4.4 — the case that fixes the rule
+        t = hal.ANE_M1
+        assert t.attests("conv3d") and not t.reaches("conv3d")
+        v = capability.confirm_op("conv3d", t)
+        assert not v.reachable and v.layer == "lowering"
+
+    def test_family_gates(self):
+        # paper:T4.1 — sin/cos native only from A15 (H15)
+        assert not hal.ANE_M1.reaches("sin")
+        assert hal.ANE_M3.reaches("sin")
+        # texture engine arrives at A14
+        assert not hal.ANE_M1.reaches("resize_texture")
+        assert hal.ANE_M2.reaches("resize_texture")
+
+    def test_no_path_on_any_family(self):
+        # paper:§4.2 — reduce_prod / scatter / recurrent cells never lower
+        for op in ("reduce_prod", "scatter", "gru", "lstm"):
+            for t in (hal.ANE_M1, hal.ANE_M5):
+                assert not t.reaches(op), op
+
+    def test_confirm_op_on_real_backend(self):
+        # compile-and-run on the actual XLA target: NATIVE for standard ops
+        for op in ("matmul", "softmax", "conv2d", "reduce_prod"):
+            v = capability.confirm_op(op, hal.TPU_V5E)
+            assert v.reachable, v
+
+    def test_census_gap_exists(self):
+        rows = capability.attested_vs_reachable(hal.ANE_M1)
+        gap = [op for op, att, reach in rows if att and not reach]
+        assert "conv3d" in gap
+
+
+class TestSegmenter:
+    def _ops(self, arch="tinyllama-1.1b", shape="decode_32k", n=7):
+        cfg = configs.get_config(arch)
+        return costmodel.op_graph(cfg, configs.SHAPES[shape])[:n]
+
+    def test_matches_brute_force(self):
+        ops = self._ops()
+        d = sg.place(ops, sg.ANE_BACKENDS)
+        b = sg.brute_force(ops, sg.ANE_BACKENDS)
+        assert abs(d.cost - b.cost) < 1e-12
+
+    def test_transfer_penalty_favors_long_segments(self):
+        # paper:§5.3 — the transfer cost is why minimum-cost solutions favor
+        # long single-backend runs
+        ops = self._ops(n=8)
+        cheap = sg.place(ops, sg.ANE_BACKENDS, transfer_bytes_per_s=1e15)
+        costly = sg.place(ops, sg.ANE_BACKENDS, transfer_bytes_per_s=1e6)
+        assert len(costly.segments) <= len(cheap.segments)
+
+    def test_ineligible_op_routes_around(self):
+        # an op the engine cannot accept has no engine node -> fallback
+        backends = (
+            sg.Backend("ane", 12e12, 51e9, rejects=frozenset({"attn"})),
+            sg.Backend("gpu", 2.6e12, 230e9),
+        )
+        ops = self._ops("tinyllama-1.1b", "train_4k", 6)
+        p = sg.place(ops, backends)
+        for name, b in zip(p.ops, p.backend):
+            if "attn" in name:
+                assert b == "gpu"
+
+    def test_cost_equation_form(self):
+        # cost = max(flops/P, bytes/B): a compute-heavy op is flops-priced,
+        # a byte-heavy op bandwidth-priced
+        b = sg.ANE_BACKENDS[0]
+        heavy = costmodel.OpCost("x", 1e12, 1e3)
+        wide = costmodel.OpCost("y", 1e3, 1e9)
+        assert b.op_cost(heavy) == pytest.approx(1e12 / b.flops_per_s)
+        assert b.op_cost(wide) == pytest.approx(1e9 / b.bytes_per_s)
+
+
+class TestCompression:
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(256, 128)).astype(np.float32)
+
+    @pytest.mark.parametrize("form,max_err", [
+        (WeightForm.INT8, 0.02), (WeightForm.BLOCKWISE, 0.02),
+        (WeightForm.INT4_PALETTE, 0.25), (WeightForm.SPARSE, 0.6),
+    ])
+    def test_round_trip_error_bounds(self, form, max_err):
+        assert cp.accuracy_error(form, self.w) <= max_err
+
+    def test_stream_vs_fold_gates_match_paper(self):
+        # paper:T7.1 — M1 streams int4+sparse, folds int8+blockwise;
+        # A14/M2 adds int8; A15/M3 adds blockwise; M5 streams all four
+        m1, m2, m3, m5 = hal.ANE_M1, hal.ANE_M2, hal.ANE_M3, hal.ANE_M5
+        assert m1.streams(WeightForm.INT4_PALETTE) and m1.streams(WeightForm.SPARSE)
+        assert not m1.streams(WeightForm.INT8) and not m1.streams(WeightForm.BLOCKWISE)
+        assert m2.streams(WeightForm.INT8) and not m2.streams(WeightForm.BLOCKWISE)
+        assert m3.streams(WeightForm.BLOCKWISE)
+        assert all(m5.streams(f) for f in WeightForm)
+
+    def test_fold_moves_dense_bytes(self):
+        # paper:§7.3 — the int8 fold on M1 is a stored-size saving only
+        p = cp.encode(WeightForm.INT8, self.w)
+        assert p.stored_bytes < p.dense_bytes            # stored: halved
+        assert cp.dram_bytes(p, hal.ANE_M1) == p.dense_bytes   # moved: dense
+        assert cp.dram_bytes(p, hal.ANE_M2) == p.stored_bytes  # A14+: streams
+
+    def test_int4_stream_byte_ratio(self):
+        # 4-bit indices -> ~4x fewer weight bytes (the raw ratio behind the
+        # measured 2.37x of paper:T7.4, which includes activation traffic)
+        p = cp.encode(WeightForm.INT4_PALETTE, self.w)
+        assert 3.5 <= p.dense_bytes / p.stored_bytes <= 4.5
+        # with activation bytes included, the predicted speedup drops toward
+        # the paper's measured 2.37x
+        sp = cp.stream_speedup(p, hal.ANE_M1, act_bytes=p.dense_bytes * 0.25)
+        assert 2.0 <= sp <= 3.2
+
+    def test_chooser_follows_paper_procedure(self):
+        # compute-bound -> fp16 (a stream cannot help)
+        f = cp.choose_weight_form(self.w, hal.ANE_M1, flops=1e12, act_bytes=10.0)
+        assert f == WeightForm.FP16
+        # bandwidth-bound + palettizable weight -> int4 on M1
+        clustered = self.rng.choice(
+            np.linspace(-1, 1, 16), size=(256, 128)).astype(np.float32)
+        f = cp.choose_weight_form(clustered, hal.ANE_M1,
+                                  flops=2 * 256 * 128 * 4, act_bytes=1e3)
+        assert f == WeightForm.INT4_PALETTE
+        # mostly-zero weight -> sparse beats when int4 misses tolerance
+        sparse_w = self.w.copy()
+        sparse_w[self.rng.random(self.w.shape) < 0.6] = 0.0
+        f = cp.choose_weight_form(sparse_w, hal.ANE_M1,
+                                  flops=2 * 256 * 128 * 4, act_bytes=1e3,
+                                  tolerance=0.35)
+        assert f in (WeightForm.INT4_PALETTE, WeightForm.SPARSE)
+
+    def test_palette_packing_worked_example(self):
+        # paper:§7.2 — [1,0,0,1] with lut[0]=0.0, lut[1]=1.0 packs to two
+        # bytes 0x01, 0x10 (low nibble first)
+        w = np.array([[1.0], [0.0], [0.0], [1.0]], np.float32)
+        from repro.kernels.palette.palette_matmul import pack_kn
+        packed, lut = pack_kn(w, iters=2)
+        dec = [lut[packed[0, 0] & 0xF], lut[packed[0, 0] >> 4],
+               lut[packed[1, 0] & 0xF], lut[packed[1, 0] >> 4]]
+        np.testing.assert_allclose(dec, [1.0, 0.0, 0.0, 1.0], atol=1e-6)
+
+
+class TestDispatch:
+    def test_content_hash_cache_semantics(self):
+        # paper:§5.6 — identical structure hits; changing shape/option misses
+        cache = dispatch.ProgramCache()
+        f = lambda x: x * 2  # noqa: E731
+        x8 = jnp.ones((8,))
+        x16 = jnp.ones((16,))
+        cache.compile(f, x8)
+        cache.compile(f, x8)
+        assert cache.stats.hits == 1 and cache.stats.misses == 1
+        cache.compile(f, x16)                 # shape change -> new key
+        assert cache.stats.misses == 2
+        cache.compile(f, x8, options="opt-level=3")
+        assert cache.stats.misses == 3
+        cache.compile(f, x8, force_recompilation=True)
+        assert cache.stats.misses == 4        # defeats the warm start
+
+    def test_execution_stream_serializes(self):
+        cache = dispatch.ProgramCache()
+        compiled, key = cache.compile(lambda x: x + 1, jnp.zeros((4,)))
+        stream = dispatch.ExecutionStream(cache)
+        stream.encode_operation(compiled, (jnp.zeros((4,)),), key)
+        stream.encode_operation(compiled, (jnp.ones((4,)),), key)
+        outs = stream.execute_sync()
+        assert len(outs) == 2 and float(outs[1][0]) == 2.0
+        assert len(stream.records) == 2
+
+    def test_resident_state_never_recrosses_host(self):
+        # paper:§2.6 — output buffer aliases the next input buffer: the
+        # donated argument's buffer is reused (XLA donation)
+        step = dispatch.resident(lambda s, x: (s + x, s.sum()), 0)
+        s = jnp.zeros((4,))
+        for i in range(4):
+            s, total = step(s, jnp.ones((4,)))
+        # resident accumulator returns 1,2,3,4-like progression (paper §2.6)
+        assert float(total) == 3 * 4  # sum before last add
+
+
+class TestRoofline:
+    def test_parse_post_optimization_format(self):
+        hlo = """
+  %ar = f32[256,1024]{1,0} all-reduce(%x), replica_groups=[16,32]<=[512], to_apply=%add
+  %ag = f32[64,128]{1,0} all-gather(%y), replica_groups=[32,16]<=[512], dimensions={0}
+  %rs = bf16[32,128]{1,0} reduce-scatter(%z), replica_groups=[32,16]<=[512], dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+"""
+        st = roofline.parse_collectives(hlo)
+        assert st.bytes_by_kind["all-reduce"] == 256 * 1024 * 4
+        # all-gather operand = result / group_size
+        assert st.bytes_by_kind["all-gather"] == 64 * 128 * 4 / 16
+        # reduce-scatter operand = result * group_size
+        assert st.bytes_by_kind["reduce-scatter"] == 32 * 128 * 2 * 16
+        assert st.bytes_by_kind["collective-permute"] == 8 * 8 * 2
+
+    def test_parse_real_compiled_module(self):
+        # a psum under 2 fake... single device: no collectives, parse = 0
+        f = jax.jit(lambda x: x @ x.T)
+        hlo = f.lower(jnp.ones((8, 8))).compile().as_text()
+        st = roofline.parse_collectives(hlo)
+        assert st.total_bytes == 0.0
+
+    def test_ridge_point(self):
+        # paper:T9.2 — I* = P/B ~ 141 FLOP/byte on the M1
+        assert hal.ANE_M1.ridge_flop_per_byte == pytest.approx(141.2, abs=1.0)
+        # v5e: 197e12/819e9 ~ 241
+        assert hal.TPU_V5E.ridge_flop_per_byte == pytest.approx(240.5, abs=1.0)
+
+    def test_attainable_rate_two_regimes(self):
+        t = hal.ANE_M1
+        assert roofline.attainable_rate(1000.0, t) == t.peak_flops
+        assert roofline.attainable_rate(10.0, t) == 10.0 * t.hbm_bandwidth
+
+    def test_dispatch_floor_dominates_small_ops(self):
+        # paper:§9.3 — below the floor, neither the op nor its size matters
+        t = hal.ANE_M1
+        t_small, _ = roofline.dispatch_time(1e6, 1e4, t)
+        assert t_small == pytest.approx(t.dispatch_floor_s, rel=0.01)
+
+
+class TestCostModel:
+    @pytest.mark.parametrize("arch,expected_b", [
+        ("tinyllama-1.1b", 1.1), ("granite-8b", 8.0), ("phi4-mini-3.8b", 3.8),
+        ("dbrx-132b", 132.0), ("deepseek-v3-671b", 671.0),
+        ("chameleon-34b", 34.0),
+    ])
+    def test_param_counts_match_published(self, arch, expected_b):
+        got = costmodel.param_count(configs.get_config(arch)) / 1e9
+        assert got == pytest.approx(expected_b, rel=0.15), got
+
+    def test_moe_active_far_below_total(self):
+        cfg = configs.get_config("deepseek-v3-671b")
+        total = costmodel.param_count(cfg)
+        active = costmodel.active_param_count(cfg)
+        assert active / total < 0.08   # ~37B / 671B
+
+    def test_model_flops_6nd(self):
+        cfg = configs.get_config("tinyllama-1.1b")
+        sh = configs.SHAPES["train_4k"]
+        mf = costmodel.model_flops(cfg, sh)
+        n = costmodel.active_param_count(cfg)
+        assert mf == pytest.approx(6.0 * n * sh.global_batch * sh.seq_len)

@@ -1,0 +1,240 @@
+"""Per-kernel allclose sweeps: shapes x dtypes against the pure-jnp oracles.
+
+Kernels execute under interpret=True on CPU; the same pallas_call lowers for
+TPU with explicit BlockSpec VMEM tiling (the dry-run exercises lowering)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hal
+from repro.kernels.anemm.anemm import anemm
+from repro.kernels.anemm.ref import anemm_ref
+from repro.kernels.anemm import ops as anemm_ops
+from repro.kernels.palette.palette_matmul import pack_kn, palette_matmul
+from repro.kernels.palette.ref import palette_matmul_ref
+from repro.kernels.palette.ops import PaletteLinear
+from repro.kernels.sparse.sparse_matmul import pack_pair_sparse, sparse_matmul
+from repro.kernels.sparse.ref import sparse_matmul_ref
+from repro.kernels.sparse.ops import SparseLinear
+from repro.kernels.act_lut.ops import lut_activation
+from repro.kernels.act_lut.ref import act_lut_ref, build_lut
+from repro.kernels.flash.flash_attention import flash_attention
+from repro.kernels.flash.ref import flash_attention_ref
+from repro.kernels.flash import ops as flash_ops
+
+rng = np.random.default_rng(42)
+
+MM_SHAPES = [(128, 512, 128), (96, 256, 64), (8, 32, 8), (1, 1024, 16),
+             (200, 300, 100), (256, 1024, 384)]
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.float16]
+
+
+class TestAnemm:
+    @pytest.mark.parametrize("shape", MM_SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_vs_oracle(self, shape, dtype):
+        m, k, n = shape
+        a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+        b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+        # fp32 tolerance covers blocked-K accumulation-order differences
+        tol = 1e-3 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(anemm(a, b), np.float32),
+            np.asarray(anemm_ref(a, b), np.float32), rtol=tol, atol=tol)
+
+    def test_epilogue_scale_bias(self):
+        a = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(128, 32)), jnp.float32)
+        s = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+        np.testing.assert_allclose(anemm(a, b, s, c),
+                                   anemm_ref(a, b, s, c), rtol=1e-4, atol=1e-4)
+
+    def test_ane_mode_saturates_at_2_15(self):
+        # the paper's MAC output-port ceiling, in the kernel epilogue
+        a = jnp.full((1, 2), 128.0, jnp.float16)
+        assert np.isinf(anemm(a, jnp.full((2, 1), 128.0, jnp.float16),
+                              ane_mode=True)[0, 0])
+        below = anemm(a, jnp.asarray([[127.9], [127.9]], jnp.float16),
+                      ane_mode=True)[0, 0]
+        assert np.isfinite(np.asarray(below, np.float32))
+
+    def test_vjp_matches_xla(self):
+        a = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(128, 32)), jnp.float32)
+        g1 = jax.grad(lambda a, b: anemm_ops.matmul(a, b).sum(), (0, 1))(a, b)
+        g2 = jax.grad(lambda a, b: (a @ b).sum(), (0, 1))(a, b)
+        for x, y in zip(g1, g2):
+            np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-5)
+
+
+class TestPalette:
+    @pytest.mark.parametrize("shape", [(64, 256, 192), (32, 128, 64),
+                                       (128, 512, 256)])
+    def test_vs_oracle(self, shape):
+        m, k, n = shape
+        w = rng.normal(size=(k, n)).astype(np.float32)
+        packed, lut = pack_kn(w, iters=4)
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        got = palette_matmul(a, jnp.asarray(packed), jnp.asarray(lut))
+        ref = palette_matmul_ref(a, jnp.asarray(packed), jnp.asarray(lut))
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+    def test_hbm_bytes_quartered(self):
+        # the streaming property: packed bytes ~ dense/4 (paper:§7.3 int4)
+        lin = PaletteLinear.pack(rng.normal(size=(256, 128)).astype(np.float32))
+        assert lin.dense_bytes() / lin.hbm_bytes() > 3.5
+
+    def test_bf16_activations(self):
+        w = rng.normal(size=(128, 64)).astype(np.float32)
+        packed, lut = pack_kn(w, iters=4)
+        a = jnp.asarray(rng.normal(size=(16, 128)), jnp.bfloat16)
+        got = palette_matmul(a, jnp.asarray(packed), jnp.asarray(lut))
+        ref = palette_matmul_ref(a, jnp.asarray(packed), jnp.asarray(lut))
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestSparse:
+    @pytest.mark.parametrize("shape", [(64, 256, 192), (16, 128, 64),
+                                       (96, 512, 128)])
+    def test_vs_oracle(self, shape):
+        m, k, n = shape
+        w = rng.normal(size=(k, n)).astype(np.float32)
+        vals, sel = pack_pair_sparse(w)
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        got = sparse_matmul(a, jnp.asarray(vals), jnp.asarray(sel))
+        ref = sparse_matmul_ref(a, jnp.asarray(vals), jnp.asarray(sel))
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+    def test_keeps_larger_magnitude_of_each_pair(self):
+        w = np.tile(np.array([[0.1], [-2.0]], np.float32), (8, 8))  # (16, 8)
+        vals, sel = pack_pair_sparse(w)
+        assert np.all(np.asarray(vals) == np.float16(-2.0))
+
+    def test_byte_ratio(self):
+        lin = SparseLinear.pack(rng.normal(size=(256, 128)).astype(np.float32))
+        ratio = lin.hbm_bytes() / lin.dense_bytes()
+        assert 0.5 < ratio < 0.57      # 0.53x: values + packed mask
+
+
+class TestActLut:
+    @pytest.mark.parametrize("name", ["sigmoid", "tanh", "gelu", "swish",
+                                      "erf", "softsign"])
+    def test_vs_numerics_oracle(self, name):
+        t = build_lut(name)
+        x = np.linspace(t.xs[0] - 3, t.xs[-1] + 3, 1311).astype(np.float32)
+        got = np.asarray(lut_activation(name)(jnp.asarray(x)), np.float64)
+        ref = act_lut_ref(x, t)
+        np.testing.assert_allclose(got, ref, atol=2e-3)
+
+    def test_nan_coercion_in_kernel(self):
+        got = lut_activation("sigmoid")(jnp.asarray([np.nan, 0.0], jnp.float32))
+        assert float(got[0]) == 1.0
+
+    def test_gradient_is_segment_slope(self):
+        f = lut_activation("sigmoid")
+        g = jax.grad(lambda x: f(x).sum())(jnp.asarray([0.0], jnp.float32))
+        assert abs(float(g[0]) - 0.25) < 0.02   # sigmoid'(0) = 0.25
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        x = jnp.asarray(rng.normal(size=(257,)), dtype)
+        y = lut_activation("tanh")(x)
+        assert y.shape == x.shape and y.dtype == dtype
+
+
+class TestFlash:
+    @pytest.mark.parametrize("cfg", [
+        (2, 4, 2, 128, 128, 64, True, None),
+        (1, 8, 8, 100, 100, 32, True, None),
+        (2, 4, 1, 64, 256, 64, False, None),
+        (1, 4, 2, 256, 256, 64, True, 64),
+        (1, 2, 2, 333, 333, 16, True, None),
+    ])
+    def test_vs_oracle(self, cfg):
+        b, h, kvh, sq, skv, d, caus, win = cfg
+        q = jnp.asarray(rng.normal(size=(b, h, sq, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, kvh, skv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, kvh, skv, d)), jnp.float32)
+        got = flash_attention(q, k, v, causal=caus, window=win, bq=64, bk=64)
+        ref = flash_attention_ref(q, k, v, causal=caus, window=win)
+        np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+    def test_narrow_dtypes(self, dtype):
+        q = jnp.asarray(rng.normal(size=(1, 4, 64, 32)), dtype)
+        k = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), dtype)
+        v = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), dtype)
+        got = flash_attention(q, k, v, bq=32, bk=32)
+        ref = flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_vjp(self):
+        q = jnp.asarray(rng.normal(size=(1, 4, 64, 32)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), jnp.float32)
+        g1 = jax.grad(lambda *a: flash_ops.attention(*a).sum(), (0, 1, 2))(q, k, v)
+        g2 = jax.grad(lambda *a: flash_attention_ref(*a).sum(), (0, 1, 2))(q, k, v)
+        for x, y in zip(g1, g2):
+            np.testing.assert_allclose(x, y, rtol=3e-3, atol=3e-3)
+
+    def test_vmem_budget_respected(self):
+        # the paper's working-set rule: default tiles fit the VMEM budget
+        bq = bk = 512
+        d = 128
+        live = (bq * d + 2 * bk * d) * 4 + (bq * d + 2 * bq) * 4 + bq * bk * 4
+        assert live < hal.TPU_V5E.onchip_bytes
+
+
+class TestDecodeAttention:
+    """One-token GQA decode against a long cache (the serving hot path)."""
+
+    @pytest.mark.parametrize("cfg", [
+        (2, 8, 2, 256, 64, None, 200),
+        (1, 4, 1, 128, 32, None, 100),
+        (2, 4, 4, 512, 64, 128, 400),    # rolling window
+        (3, 16, 8, 96, 128, None, 50),
+    ])
+    def test_vs_oracle(self, cfg):
+        from repro.kernels.flash.decode_attention import (decode_attention,
+                                                          decode_attention_ref)
+        b, h, kvh, s, d, win, length = cfg
+        q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+        pos = jnp.where(pos < length, pos, -1)
+        cur = jnp.full((b,), length - 1, jnp.int32)
+        got = decode_attention(q, k, v, pos, cur, window=win, bk=64)
+        ref = decode_attention_ref(q, k, v, pos, cur, window=win)
+        np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3)
+
+    def test_matches_model_decode_path(self):
+        """The kernel agrees with the model zoo's decode attention on the
+        same cache layout."""
+        from repro.kernels.flash.decode_attention import decode_attention
+        from repro.models.attention import _decode_attention
+        from repro import configs
+        import dataclasses
+        cfg = dataclasses.replace(configs.get_smoke("tinyllama-1.1b"),
+                                  attn_window=None)
+        b, s, kvh, dh, h = 2, 64, cfg.n_kv_heads, cfg.d_head, cfg.n_heads
+        q = jnp.asarray(rng.normal(size=(b, 1, h, dh)), jnp.float32)
+        cache = {
+            "k": jnp.asarray(rng.normal(size=(b, s, kvh, dh)), jnp.float32),
+            "v": jnp.asarray(rng.normal(size=(b, s, kvh, dh)), jnp.float32),
+            "pos": jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32),
+        }
+        positions = jnp.full((b, 1), s - 1, jnp.int32)
+        ref = _decode_attention(cfg, q, cache, positions)   # (b,1,h,dh)
+        got = decode_attention(q[:, 0].reshape(b, h, dh), cache["k"],
+                               cache["v"], cache["pos"], positions[:, 0],
+                               bk=32)
+        np.testing.assert_allclose(got, np.asarray(ref[:, 0]).reshape(b, h, dh),
+                                   rtol=2e-3, atol=2e-3)

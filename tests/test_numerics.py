@@ -1,0 +1,168 @@
+"""Paper ch. 3 reproductions: the fp16 datapath + wide accumulator oracle.
+
+Every test here validates a *specific measured claim of the paper* (marked
+with its table/section). Where the paper itself leaves the tie mode
+unresolved (§3.6), the test pins the structure (threshold location, hard
+floor) rather than the tie-dependent values.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import hal, numerics as nu
+
+
+class TestWideAccumulator:
+    def test_survivor_floor_is_exactly_four(self):
+        # paper:T3.1 — hard floor of exactly 4 survivors at and above 4096
+        for tie in ("even", "away"):
+            got = nu.survivor_sweep([4096, 8000, 16000, 30000], tie=tie)
+            assert got == [4, 4, 4, 4], (tie, got)
+
+    def test_survivor_threshold_at_4096(self):
+        # paper:T3.1 — 16 at 1024 (exact regime); the drop to the floor
+        # happens exactly where fp16 spacing reaches 4
+        assert nu.survivor_sweep([1024])[0] == 16
+        assert nu.survivor_sweep([4090], tie="away")[0] > 4
+        assert nu.survivor_sweep([4096], tie="away")[0] == 4
+
+    def test_16000_ones_bit_exact(self):
+        # paper:§3.2 — a reduction of sixteen thousand ones is bit exact
+        assert nu.wide_reduce(np.ones(16000)) == 16000.0
+
+    def test_naive_fp16_stalls_near_2048(self):
+        # the contrast case the paper gives: a narrow running sum stalls
+        acc = np.float16(0)
+        for _ in range(4000):
+            acc = np.float16(acc + np.float16(1.0))
+        assert acc == 2048.0
+
+    def test_worked_sum_between_naive_and_exact(self):
+        # paper:§3.2 — [4096] + [1]*1024: engine 5116, naive 4096, exact 5120.
+        # Our model lands within one in-tile rounding step of the decoded
+        # value; the structural claim (strictly between) must hold.
+        got = nu.wide_reduce(np.array([4096.0] + [1.0] * 1024))
+        assert 4096.0 < got < 5120.0
+        assert abs(got - 5116.0) <= 4.0
+
+    def test_cancellation_triple_survives_below_threshold(self):
+        # paper:§3.2 — big, -big, one near 4000: the ones survive
+        v = np.array([3000.0, -3000.0, 1.0] * 16)
+        assert nu.wide_reduce(v, tie="away") >= 16.0
+
+
+class TestSaturation:
+    def test_mac_output_port_ceiling_pinned_to_the_bit(self):
+        # paper:§3.7 — 32752 passes through a linear; 32768 returns inf
+        one = np.array([[1.0]])
+        assert nu.ane_matmul(np.array([[32752.0]]), one)[0, 0] == 32752.0
+        assert nu.ane_matmul(np.array([[32768.0]]), one)[0, 0] == np.inf
+        assert nu.ane_matmul(np.array([[-32768.0]]), one)[0, 0] == -np.inf
+
+    def test_interior_partial_overflows_despite_cancellation(self):
+        # paper:§3.7 — an interior partial above 2^15 overflows even when a
+        # later cancellation would bring the result back into range.
+        # (The oracle models the port on the final value; the kernel-level
+        # behavior is covered in the kernel ANE-mode tests.)
+        a = np.array([[30000.0, 30000.0, -30000.0]])
+        b = np.ones((3, 1))
+        assert nu.ane_matmul(a, b)[0, 0] == np.inf
+
+    def test_width_slice_gain(self):
+        # paper:§3.7 — 4094 passes (4094*16 == 65504), 4096 -> inf
+        x = np.full((1, 8), hal.WIDTH_SLICE_FINITE_FILL)
+        assert nu.width_slice(x, 1, 4)[0, 0] == hal.WIDTH_SLICE_FINITE_FILL
+        x = np.full((1, 8), hal.WIDTH_SLICE_OVERFLOW_FILL)
+        assert nu.width_slice(x, 1, 4)[0, 0] == np.inf
+        # control: zero begin offset is free of the saturation
+        assert nu.width_slice(x, 0, 4)[0, 0] == hal.WIDTH_SLICE_OVERFLOW_FILL
+
+
+class TestEdgeSemantics:
+    def test_nan_coerces_to_inf_never_emitted(self):
+        # paper:§3.6
+        assert nu.ane_relu(np.nan) == np.inf
+        assert nu.ane_max(np.nan, 1.0) == np.inf
+        assert float(nu.build_lut("sigmoid")(np.array([np.nan]))[0]) == 1.0
+        assert float(nu.build_lut("tanh")(np.array([np.nan]))[0]) == 1.0
+
+    def test_indeterminates_flush_to_positive_zero(self):
+        assert nu.ane_add(np.inf, -np.inf) == 0.0
+        assert nu.ane_mul(0.0, np.inf) == 0.0
+        assert nu.ane_sqrt(-1.0) == 0.0
+        assert nu.ane_log(-1.0) == 0.0
+
+    def test_log_zero_sentinel(self):
+        assert nu.ane_log(0.0) == nu.LOG_ZERO_SENTINEL  # -45440
+
+    def test_signed_zero_reciprocal(self):
+        assert nu.ane_reciprocal(-0.0) == np.inf
+        assert nu.ane_rsqrt(-0.0) == np.inf
+
+    def test_softmax_max_subtract_never_overflows(self):
+        got = nu.ane_softmax(np.array([1000.0, 1.0, 2.0, 3.0]))
+        np.testing.assert_array_equal(got, [1.0, 0.0, 0.0, 0.0])
+        got = nu.ane_softmax(np.array([5.0, 5.0, 5.0, 5.0]))
+        np.testing.assert_array_equal(got, [0.25] * 4)
+
+    def test_softmax_nan_lane_takes_all_mass(self):
+        got = nu.ane_softmax(np.array([np.nan, 1.0, 2.0, 3.0]))
+        assert got[0] == 1.0 and got[1:].sum() == 0.0
+
+    def test_bare_exp_overflows_at_11_094(self):
+        assert nu.ane_exp(hal.EXP_OVERFLOW_INPUT) == np.inf
+        assert np.isfinite(nu.ane_exp(11.0))
+
+
+class TestActivationTables:
+    @pytest.mark.parametrize("name,bound", [
+        ("sigmoid", 0.0034), ("tanh", 0.0017), ("gelu", 0.0059),
+    ])
+    def test_worst_error_meets_paper_bound(self, name, bound):
+        # paper:T3.3 per-function worst absolute errors
+        t = nu.build_lut(name)
+        assert nu.lut_worst_error(t) <= bound
+
+    def test_knot_count_is_33(self):
+        assert nu.build_lut("sigmoid").xs.shape == (hal.LUT_KNOTS,)
+
+    def test_origin_biases(self):
+        # paper:T3.3 — gelu -0.000543, swish -0.001259 at x=0
+        assert abs(float(nu.build_lut("gelu")(np.zeros(1))[0]) - (-0.000543)) < 1e-6
+        assert abs(float(nu.build_lut("swish")(np.zeros(1))[0]) - (-0.001259)) < 1e-6
+
+    def test_softplus_collapses_at_infinity(self):
+        # paper:§3.6 — softplus(+inf) returns +0 (a table collapse)
+        assert float(nu.build_lut("softplus")(np.array([np.inf]))[0]) == 0.0
+
+    def test_trig_seam_error_within_paper_range(self):
+        # paper:T3.3 — sin/cos up to 0.04..0.12 near argument-reduction seams
+        for name in ("sin", "cos"):
+            assert nu.lut_worst_error(nu.build_lut(name)) <= 0.12
+
+    def test_clamp_past_domain(self):
+        t = nu.build_lut("sigmoid")
+        assert float(t(np.array([50.0]))[0]) == t.hi_clamp
+        assert float(t(np.array([-50.0]))[0]) == t.lo_clamp
+
+
+class TestDeterminism:
+    def test_rerun_bit_identical(self):
+        # paper:§3.8 — fixed graph + fixed input -> identical fp16 bytes
+        rng = np.random.default_rng(0)
+        a = rng.normal(size=(16, 64)).astype(np.float32)
+        b = rng.normal(size=(64, 8)).astype(np.float32)
+        outs = [nu.ane_matmul(a, b) for _ in range(5)]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(outs[0], o)
+
+    def test_association_order_changes_bits(self):
+        # paper:§3.8 — (a+b)+c vs a+(b+c) differ by fp16 rounding on a
+        # sizeable fraction of elements (the paper measures ~31%); each
+        # ordering is itself perfectly reproducible
+        rng = np.random.default_rng(7)
+        a, b, c = rng.normal(size=(3, 1000))
+        left = nu.round_fp16(nu.round_fp16(a + b) + c)
+        right = nu.round_fp16(a + nu.round_fp16(b + c))
+        frac = np.mean(left != right)
+        assert 0.05 < frac < 0.6, frac

@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as cp, hal, numerics as nu, segmenter as sg
+from repro.core.costmodel import OpCost
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+finite_f = st.floats(min_value=-60000, max_value=60000,
+                     allow_nan=False, allow_infinity=False)
+
+
+class TestNumericsProperties:
+    @given(st.lists(finite_f, min_size=1, max_size=64))
+    def test_round_fp16_idempotent(self, xs):
+        x = np.array(xs)
+        once = nu.round_fp16(x)
+        assert np.array_equal(nu.round_fp16(once), once)
+
+    @given(st.lists(st.integers(min_value=0, max_value=2048),
+                    min_size=1, max_size=256))
+    def test_wide_reduce_exact_for_small_integers(self, xs):
+        # representable sums come back near exact (paper §3.2): integer
+        # inputs with partials < 2^24 reduce exactly in the wide register
+        # as long as in-tile fp16 partials stay on-grid (<= 2048 each, tile
+        # of 4 -> partial <= 8192, grid spacing 4 ... so use <= 511 values)
+        xs = [min(x, 511) for x in xs]
+        v = np.array(xs, dtype=np.float64)
+        got = nu.wide_reduce(v)
+        # in-tile partials <= 4*511 < 2048: every partial is fp16-exact
+        assert got == float(np.sum(v))
+
+    @given(finite_f)
+    def test_engine_never_emits_nan(self, x):
+        for fn in (nu.ane_relu, nu.ane_sqrt, nu.ane_log, nu.ane_reciprocal,
+                   nu.ane_exp):
+            out = np.asarray(fn(x))
+            assert not np.any(np.isnan(out)), fn.__name__
+
+    @given(st.floats(min_value=-9.0, max_value=8.0, allow_nan=False))
+    def test_lut_sigmoid_monotone_and_bounded(self, x):
+        t = nu.build_lut("sigmoid")
+        y = float(t(np.array([x]))[0])
+        y2 = float(t(np.array([x + 0.25]))[0])
+        assert 0.0 <= y <= 1.0
+        assert y2 >= y - 1e-3   # monotone up to fp16 grid jitter
+
+    @given(st.lists(finite_f, min_size=2, max_size=32),
+           st.lists(finite_f, min_size=2, max_size=32))
+    def test_matmul_saturation_monotone(self, a_vals, b_vals):
+        # if the exact |result| of a 1x1 contraction exceeds 2^15, the
+        # oracle yields inf; below 2^15 - margin it stays finite
+        n = min(len(a_vals), len(b_vals))
+        a = np.array(a_vals[:n])[None, :] / 100.0
+        b = np.array(b_vals[:n])[:, None] / 100.0
+        out = nu.ane_matmul(a, b)[0, 0]
+        partials = np.cumsum(nu.coerce_input(a)[0] * nu.coerce_input(b)[:, 0])
+        if np.all(np.abs(partials) < 32000):
+            assert np.isfinite(out)
+
+
+class TestCompressionProperties:
+    @given(st.integers(min_value=1, max_value=7))
+    def test_int8_roundtrip_relative_error(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(64, 32)).astype(np.float32)
+        err = cp.accuracy_error(hal.WeightForm.INT8, w)
+        assert err < 0.02   # paper: ~1% relative vs fp32 reference
+
+    @given(st.integers(min_value=1, max_value=7))
+    def test_stored_bytes_ordering(self, seed):
+        # int4 < blockwise ~ int8 < sparse-ish < fp16 (dense)
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(64, 32)).astype(np.float32)
+        sizes = {f: cp.encode(f, w).stored_bytes
+                 for f in (hal.WeightForm.INT4_PALETTE, hal.WeightForm.INT8,
+                           hal.WeightForm.SPARSE)}
+        dense = cp.encode(hal.WeightForm.FP16, w).stored_bytes
+        assert sizes[hal.WeightForm.INT4_PALETTE] < sizes[hal.WeightForm.INT8]
+        assert all(s < dense for s in sizes.values())
+
+    @given(st.integers(min_value=0, max_value=9))
+    def test_grad_quantize_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        g = rng.normal(size=(777,)).astype(np.float32) * 10.0 ** float(rng.integers(-3, 3))
+        import jax.numpy as jnp
+        q, s = quantize_int8(jnp.asarray(g))
+        back = np.asarray(dequantize_int8(q, s, g.shape))
+        denom = np.linalg.norm(g) + 1e-12
+        assert np.linalg.norm(back - g) / denom < 0.01
+
+    @given(st.integers(min_value=1, max_value=5))
+    def test_streaming_never_moves_more_than_dense(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(64, 32)).astype(np.float32)
+        for form in (hal.WeightForm.INT4_PALETTE, hal.WeightForm.SPARSE,
+                     hal.WeightForm.INT8, hal.WeightForm.BLOCKWISE):
+            p = cp.encode(form, w)
+            for target in (hal.ANE_M1, hal.ANE_M5, hal.TPU_V5E):
+                assert cp.dram_bytes(p, target) <= p.dense_bytes + 64
+
+
+class TestSegmenterProperties:
+    @given(st.integers(min_value=1, max_value=200),
+           st.integers(min_value=2, max_value=6))
+    def test_dijkstra_optimal_vs_bruteforce(self, seed, n_ops):
+        rng = np.random.default_rng(seed)
+        ops = [OpCost(f"op{i}", float(rng.uniform(1e6, 1e12)),
+                      float(rng.uniform(1e3, 1e9))) for i in range(n_ops)]
+        d = sg.place(ops, sg.ANE_BACKENDS)
+        b = sg.brute_force(ops, sg.ANE_BACKENDS)
+        assert d.cost <= b.cost * (1 + 1e-12)
+
+    @given(st.integers(min_value=1, max_value=50))
+    def test_placement_covers_every_op(self, seed):
+        rng = np.random.default_rng(seed)
+        ops = [OpCost(f"op{i}", float(rng.uniform(1e6, 1e12)),
+                      float(rng.uniform(1e3, 1e9))) for i in range(5)]
+        p = sg.place(ops, sg.ANE_BACKENDS)
+        assert len(p.backend) == len(ops)
+        assert all(b in {"ane", "gpu", "cpu"} for b in p.backend)
