@@ -14,6 +14,8 @@ The XLA mapping:
   * resident buffers       -> donated arguments (the output aliases the input
                               buffer, XLA's form of output->input port binding)
   * execution stream       -> ExecutionStream with dispatch-floor accounting
+  * op-by-device routing   -> KernelDispatcher over the kernel registry:
+                              capability-gated Pallas kernel, oracle fallback
 """
 
 from __future__ import annotations
@@ -21,9 +23,13 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
+from collections import deque
 from typing import Any, Callable, Hashable
 
 import jax
+import jax.numpy as jnp
+
+from repro.core import hal
 
 
 def content_hash(fn: Callable, args_spec: Any, options: str = "") -> str:
@@ -132,6 +138,112 @@ def resident(fn: Callable, state_argnums: int | tuple[int, ...]):
     if isinstance(state_argnums, int):
         state_argnums = (state_argnums,)
     return jax.jit(fn, donate_argnums=state_argnums)
+
+
+# ---------------------------------------------------------------------------
+# Registry-routed kernel dispatch (the paper's operation-by-device matrix)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelRoute:
+    """One resolved cell of the operation-by-device matrix."""
+
+    kernel: str
+    target: str
+    dtype: str
+    backend: str           # "pallas" | "oracle"
+    reason: str            # why the fallback fired ("" for the native path)
+
+    @property
+    def native(self) -> bool:
+        return self.backend == "pallas"
+
+
+class KernelDispatcher:
+    """Route kernel calls through the registry with capability-gated fallback.
+
+    The paper's rule (§4): an operation runs on the engine only when the
+    layer that executes it accepts it — everything else falls back, silently,
+    to the next backend. Here: a registered Pallas kernel runs natively when
+    the target's op floor reaches its capability op, the weight form it
+    streams actually streams on that target, and the activation dtype is one
+    the kernel (and the target's datapath) carries. Any miss routes to the
+    kernel's ref oracle — same arithmetic, dense bytes — and the route taken
+    is recorded so `matrix()` can print the census.
+    """
+
+    # retained route records per dispatcher — enough for any census/debug
+    # readout while keeping a serving-loop dispatcher O(1) in memory
+    ROUTE_LOG_LIMIT = 4096
+
+    def __init__(self, target: hal.Target | None = None) -> None:
+        self.target = target or hal.TPU_V5E
+        self.routes: deque[KernelRoute] = deque(maxlen=self.ROUTE_LOG_LIMIT)
+
+    # -- routing decision ---------------------------------------------------
+    def resolve(self, name: str, dtype: Any = jnp.float32) -> KernelRoute:
+        from repro.kernels import registry   # lazy: keep core importable alone
+
+        spec = registry.get(name)
+        t = self.target
+        dt = jnp.dtype(dtype).name
+        reason = ""
+        if dt not in {jnp.dtype(d).name for d in spec.dtypes}:
+            reason = f"dtype {dt} outside kernel surface"
+        elif not t.attests(spec.capability_op):
+            reason = f"{spec.capability_op}: not in the {t.generation} op table"
+        elif not t.reaches(spec.capability_op):
+            reason = f"{spec.capability_op}: attested but fails lowering"
+        elif spec.weight_form is not None and not t.streams(spec.weight_form):
+            reason = f"{spec.weight_form.value}: folds on {t.generation}"
+        elif not t.supports_dtype(dt):
+            reason = (f"{dt} is not native on {t.generation} "
+                      f"({t.native_dtype} datapath)")
+        backend = "oracle" if reason else "pallas"
+        return KernelRoute(name, t.name, dt, backend, reason)
+
+    # -- execution ----------------------------------------------------------
+    def __call__(self, name: str, inputs: dict) -> Any:
+        """Run kernel `name` on `inputs` (the registry's input bundle),
+        through the Pallas path when the target reaches it, else the oracle."""
+        from repro.kernels import registry
+
+        spec = registry.get(name)
+        route = self.resolve(name, _bundle_dtype(inputs))
+        self.routes.append(route)
+        if route.native:
+            return spec.run_kernel(inputs)
+        return spec.run_oracle(inputs)
+
+    # -- the census ---------------------------------------------------------
+    def matrix(self, dtype: Any = jnp.float32) -> list[KernelRoute]:
+        """One row per registered kernel: the op-by-device matrix column for
+        this target (paper Appendix A shape, kernel-registry rows)."""
+        from repro.kernels import registry
+
+        return [self.resolve(n, dtype) for n in registry.names()]
+
+
+def _bundle_dtype(inputs: dict) -> Any:
+    """The activation dtype of a registry input bundle: the first floating
+    jnp array wins (weights/selectors are integer side tables)."""
+    for v in inputs.values():
+        dt = getattr(v, "dtype", None)
+        if dt is not None and jnp.issubdtype(dt, jnp.floating):
+            return dt
+    return jnp.float32
+
+
+def kernel_matrix(targets: list[hal.Target] | None = None,
+                  dtype: Any = jnp.float32) -> list[KernelRoute]:
+    """The full operation-by-device matrix across targets — every registered
+    kernel x every HAL target, each cell a capability-resolved route."""
+    targets = targets or list(hal.TARGETS.values())
+    rows: list[KernelRoute] = []
+    for t in targets:
+        rows.extend(KernelDispatcher(t).matrix(dtype))
+    return rows
 
 
 def measure_dispatch_floor(n: int = 200) -> dict[str, float]:

@@ -98,6 +98,19 @@ class Target:
         """
         return self.weight_streams.get(form, False)
 
+    def supports_dtype(self, dtype_name: str) -> bool:
+        """Does this target's datapath carry `dtype_name` activations?
+
+        fp32 is universal (every engine widens); narrow dtypes must match
+        the native multiply dtype on single-dtype engines (the ANE's fp16
+        datapath has no bf16 path — paper §3.1), while the TPU MXU takes
+        both 16-bit forms."""
+        if dtype_name == "float32":
+            return True
+        if self.family == "tpu":
+            return dtype_name in ("bfloat16", "float16")
+        return dtype_name == self.native_dtype
+
     def attests(self, op: str) -> bool:
         """Capability *attestation* — a claim about one layer (paper §4.4).
 

@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hal
+from repro.kernels import compat
 from repro.kernels.common import cdiv, interpret_mode, pad_to, pick_block
 
 
@@ -109,8 +110,8 @@ def anemm(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nm * bm, nn * bn), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret_mode(),
+        **compat.pallas_call_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(*operands)
     return out[:m, :n]

@@ -15,16 +15,11 @@ the ANE and on the TPU alike.
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
-
-@functools.cache
-def interpret_mode() -> bool:
-    """Pallas interpret=True everywhere except real TPU."""
-    return jax.default_backend() != "tpu"
+from repro.kernels.compat import interpret_mode  # noqa: F401 — re-exported;
+# kernels historically import interpret_mode from here, and the probe now
+# lives with the rest of the version-adaptive surface in compat.py.
 
 
 def pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:

@@ -1,0 +1,171 @@
+"""Version-adaptive JAX/Pallas compatibility surface.
+
+The platform target is a moving API: the Pallas TPU compiler-params class
+was renamed (``TPUCompilerParams`` on jax 0.4.x -> ``CompilerParams`` on
+0.5+), the path-aware pytree helpers migrated from ``jax.tree_util`` onto
+``jax.tree``, and the set of accepted compiler-param fields drifts between
+releases. Mirroring the paper's capability discipline (§4: a capability is
+what compiles and runs, not what a table attests), this module probes the
+*installed* JAX once at import time and exposes one stable surface:
+
+    compiler_params(dimension_semantics=..., ...)  -> params pallas_call takes
+    pallas_call_params(...)                        -> kwargs dict (or {} when
+                                                      no params class exists)
+    tree_flatten_with_path / tree_map_with_path    -> path-aware pytree ops
+    interpret_mode()                               -> True off-TPU
+
+Every kernel family routes through this layer; nothing else in the tree may
+name the versioned classes directly (enforced by the conformance suite).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from typing import Any, Callable
+
+import jax
+
+try:  # pallas is present in every supported jax, but stay import-safe
+    from jax.experimental.pallas import tpu as _pltpu
+except Exception:  # pragma: no cover - exotic builds without pallas
+    _pltpu = None
+
+
+# ---------------------------------------------------------------------------
+# Version probing
+# ---------------------------------------------------------------------------
+
+
+@functools.cache
+def jax_version() -> tuple[int, int, int]:
+    """The installed jax version as a comparable (major, minor, patch)."""
+    parts = re.findall(r"\d+", jax.__version__)[:3]
+    parts += ["0"] * (3 - len(parts))
+    return tuple(int(p) for p in parts)  # type: ignore[return-value]
+
+
+@functools.cache
+def _compiler_params_cls() -> type | None:
+    """The Pallas TPU compiler-params class under whichever name this jax
+    ships it. Resolution is structural (probe both names), never a version
+    pin — a backport or rename lands here automatically."""
+    if _pltpu is None:
+        return None
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(_pltpu, name, None)
+        if cls is not None:
+            return cls
+    return None
+
+
+@functools.cache
+def compiler_param_fields() -> frozenset[str]:
+    """Field names the installed compiler-params class accepts."""
+    cls = _compiler_params_cls()
+    if cls is None:
+        return frozenset()
+    if dataclasses.is_dataclass(cls):
+        return frozenset(f.name for f in dataclasses.fields(cls))
+    import inspect
+
+    try:
+        return frozenset(inspect.signature(cls).parameters)
+    except (TypeError, ValueError):  # pragma: no cover
+        return frozenset()
+
+
+# ---------------------------------------------------------------------------
+# compiler_params surface
+# ---------------------------------------------------------------------------
+
+
+def compiler_params(**kwargs: Any):
+    """Build the TPU compiler-params object for this jax, dropping any field
+    the installed class does not know (a field that vanished in a rename is a
+    hint we can live without, not an error)."""
+    cls = _compiler_params_cls()
+    if cls is None:
+        return None
+    accepted = compiler_param_fields()
+    kept = {k: v for k, v in kwargs.items() if k in accepted and v is not None}
+    return cls(**kept)
+
+
+def pallas_call_params(**kwargs: Any) -> dict[str, Any]:
+    """``compiler_params=...`` kwargs for ``pl.pallas_call``, or ``{}`` when
+    the installed Pallas exposes no params class (interpret-only builds)."""
+    params = compiler_params(**kwargs)
+    if params is None:
+        return {}
+    return {"compiler_params": params}
+
+
+# ---------------------------------------------------------------------------
+# Path-aware pytree helpers (jax.tree.* on 0.5+, jax.tree_util on 0.4.x)
+# ---------------------------------------------------------------------------
+
+
+def _tree_fn(modern_name: str, legacy_name: str) -> Callable:
+    tree_mod = getattr(jax, "tree", None)
+    fn = getattr(tree_mod, modern_name, None) if tree_mod is not None else None
+    if fn is None:
+        fn = getattr(jax.tree_util, legacy_name)
+    return fn
+
+
+def tree_flatten_with_path(tree: Any, is_leaf: Callable | None = None):
+    """(path, leaf) pairs + treedef, under whichever module ships it."""
+    return _tree_fn("flatten_with_path", "tree_flatten_with_path")(
+        tree, is_leaf=is_leaf)
+
+
+def tree_map_with_path(f: Callable, tree: Any, *rest: Any,
+                       is_leaf: Callable | None = None):
+    return _tree_fn("map_with_path", "tree_map_with_path")(
+        f, tree, *rest, is_leaf=is_leaf)
+
+
+def tree_path_str(path: Any) -> str:
+    """A stable ``a/b/0/c`` rendering of a key path across jax versions."""
+    parts = []
+    for entry in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(entry, attr):
+                parts.append(str(getattr(entry, attr)))
+                break
+        else:
+            parts.append(str(entry))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Named-axis helpers
+# ---------------------------------------------------------------------------
+
+
+def axis_size(name: str):
+    """Size of a named mapped axis inside shard_map/pmap. ``jax.lax.axis_size``
+    only exists on newer jax; the ``psum(1, axis)`` idiom is the portable
+    spelling (it folds to a static int for a constant operand)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    return jax.lax.psum(1, name)
+
+
+# ---------------------------------------------------------------------------
+# Interpret mode
+# ---------------------------------------------------------------------------
+
+
+@functools.cache
+def interpret_mode() -> bool:
+    """Pallas ``interpret=True`` everywhere except a real TPU backend — the
+    kernel body runs in Python and the oracle sweeps validate it bit-for-bit
+    against ref.py on any host."""
+    try:
+        return jax.default_backend() != "tpu"
+    except Exception:  # pragma: no cover - backend probing failed: stay safe
+        return True

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
 from repro.kernels.common import cdiv, interpret_mode, pad_to
 
 NEG_INF = -1e30
@@ -110,9 +111,9 @@ def decode_attention(
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret_mode(),
+        **compat.pallas_call_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(qg, kp, vp, pp, current.reshape(b, 1).astype(jnp.int32))
     return out.reshape(b, h, d)
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
 from repro.kernels.common import cdiv, interpret_mode, pad_to
 
 NEG_INF = -1e30
@@ -138,8 +139,8 @@ def flash_attention(
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret_mode(),
+        **compat.pallas_call_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(qf, kf, vf)
     return out.reshape(b, h, qp.shape[2], d)[:, :, :sq]

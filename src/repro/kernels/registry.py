@@ -1,0 +1,414 @@
+"""Kernel registry: every Pallas kernel family, with its oracle attached.
+
+The paper's central artifact is an operation-by-device matrix: which kernels
+run where, validated by compile-and-run rather than attestation (§4), with a
+roofline cost entry per cell (§9). This registry is that matrix's row space:
+each kernel family registers
+
+  * the Pallas entry point and the pure-jnp/numpy **ref oracle** it must match,
+  * the supported dtypes and a set of named **shape classes** (including
+    padding/alignment edge cases — ragged dims, tiny dims, non-multiples of
+    the MXU tile),
+  * a **cost entry** producing `core.costmodel.OpCost` for the segmenter and
+    roofline,
+  * the **capability op** that gates it per target (`hal.Target.op_floor`),
+    and the weight form it streams, when any.
+
+`core.dispatch.KernelDispatcher` routes through this table with
+capability-gated fallback to the oracle, and `tests/test_conformance.py`
+sweeps every registered kernel x dtype x shape class against its oracle — a
+kernel added here is conformance-tested and dispatchable for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import OpCost
+from repro.core.hal import WeightForm
+
+# ---------------------------------------------------------------------------
+# Spec types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    """One named shape class of a kernel's sweep.
+
+    `dims` is kernel-specific (interpreted by the spec's `make_inputs`);
+    `edge=True` marks padding/alignment stress cases — ragged extents, dims
+    below one MXU tile, sizes straddling a block boundary."""
+
+    name: str
+    dims: tuple[int, ...]
+    edge: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One kernel family's row in the operation-by-device matrix."""
+
+    name: str
+    capability_op: str                  # gate key into hal.Target.op_floor
+    dtypes: tuple[Any, ...]             # activation dtypes the kernel accepts
+    cases: tuple[ShapeCase, ...]
+    make_inputs: Callable[[ShapeCase, Any, np.random.Generator], dict]
+    run_kernel: Callable[[dict], Any]
+    run_oracle: Callable[[dict], Any]
+    tol: Callable[[Any], tuple[float, float]]   # dtype -> (rtol, atol)
+    cost: Callable[[ShapeCase, Any], OpCost]
+    # Optional: weight form this kernel streams (palette/sparse) — dispatch
+    # additionally gates on target.streams(form).
+    weight_form: WeightForm | None = None
+    # Optional: (scalar_kernel_fn, scalar_ref_fn, diff_args) builder for the
+    # VJP leg of the conformance sweep. None = kernel is forward-only (or its
+    # gradient is defined elsewhere, e.g. recompute-backward wrappers).
+    make_vjp: Callable[[dict], tuple[Callable, Callable, tuple]] | None = None
+
+    @property
+    def edge_cases(self) -> tuple[ShapeCase, ...]:
+        return tuple(c for c in self.cases if c.edge)
+
+
+_REGISTRY: dict[str, KernelSpec] = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"kernel {spec.name!r} registered twice")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> KernelSpec:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown kernel {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def all_specs() -> list[KernelSpec]:
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def iter_conformance_cases() -> Iterator[tuple[KernelSpec, ShapeCase, Any]]:
+    """The generated sweep: every registered kernel x dtype x shape class."""
+    for spec in all_specs():
+        for dtype in spec.dtypes:
+            for case in spec.cases:
+                yield spec, case, dtype
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _normal(rng: np.random.Generator, shape, dtype) -> jnp.ndarray:
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def _mm_tol(dtype) -> tuple[float, float]:
+    # fp32 tolerance covers blocked-K accumulation-order differences; narrow
+    # dtypes add one rounding at the store.
+    return (1e-3, 1e-3) if dtype == jnp.float32 else (2.5e-2, 2.5e-2)
+
+
+def _itemsize(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# anemm — blocked matmul with the ANE-mode epilogue
+# ---------------------------------------------------------------------------
+
+
+def _anemm_inputs(case: ShapeCase, dtype, rng) -> dict:
+    m, k, n = case.dims
+    return {"a": _normal(rng, (m, k), dtype), "b": _normal(rng, (k, n), dtype)}
+
+
+def _anemm_vjp(inputs: dict):
+    from repro.kernels.anemm import ops as anemm_ops
+
+    a = inputs["a"].astype(jnp.float32)
+    b = inputs["b"].astype(jnp.float32)
+    return (lambda a, b: anemm_ops.matmul(a, b).sum(),
+            lambda a, b: (a @ b).sum(), (a, b))
+
+
+def _register_anemm() -> None:
+    from repro.kernels.anemm.anemm import anemm
+    from repro.kernels.anemm.ref import anemm_ref
+
+    register(KernelSpec(
+        name="anemm",
+        capability_op="matmul",
+        dtypes=(jnp.float32, jnp.bfloat16, jnp.float16),
+        cases=(
+            ShapeCase("aligned", (128, 512, 128)),
+            ShapeCase("tall", (256, 256, 64)),
+            ShapeCase("ragged", (200, 300, 100), edge=True),
+            ShapeCase("tiny", (8, 32, 8), edge=True),
+            ShapeCase("vector", (1, 384, 16), edge=True),
+            ShapeCase("off_block", (129, 257, 130), edge=True),
+        ),
+        make_inputs=_anemm_inputs,
+        run_kernel=lambda i: anemm(i["a"], i["b"]),
+        run_oracle=lambda i: anemm_ref(i["a"], i["b"]),
+        tol=_mm_tol,
+        cost=lambda c, dt: OpCost(
+            f"anemm/{c.name}", 2.0 * c.dims[0] * c.dims[1] * c.dims[2],
+            float(_itemsize(dt)) * (c.dims[0] * c.dims[1]
+                                    + c.dims[1] * c.dims[2]
+                                    + c.dims[0] * c.dims[2])),
+        make_vjp=_anemm_vjp,
+    ))
+
+
+# ---------------------------------------------------------------------------
+# palette — int4 palette-LUT weights, dequantized at the MXU input
+# ---------------------------------------------------------------------------
+
+
+def _palette_inputs(case: ShapeCase, dtype, rng) -> dict:
+    from repro.kernels.palette.palette_matmul import pack_kn
+
+    m, k, n = case.dims
+    packed, lut = pack_kn(rng.normal(size=(k, n)).astype(np.float32), iters=4)
+    return {"a": _normal(rng, (m, k), dtype),
+            "packed": jnp.asarray(packed), "lut": jnp.asarray(lut)}
+
+
+def _register_palette() -> None:
+    from repro.kernels.palette.palette_matmul import palette_matmul
+    from repro.kernels.palette.ref import palette_matmul_ref
+
+    register(KernelSpec(
+        name="palette",
+        capability_op="matmul",
+        weight_form=WeightForm.INT4_PALETTE,
+        dtypes=(jnp.float32, jnp.bfloat16),
+        cases=(
+            ShapeCase("aligned", (64, 256, 192)),
+            ShapeCase("wide", (128, 512, 256)),
+            ShapeCase("ragged", (32, 130, 72), edge=True),
+            ShapeCase("tiny", (4, 32, 16), edge=True),
+        ),
+        make_inputs=_palette_inputs,
+        run_kernel=lambda i: palette_matmul(i["a"], i["packed"], i["lut"]),
+        run_oracle=lambda i: palette_matmul_ref(i["a"], i["packed"], i["lut"]),
+        tol=_mm_tol,
+        cost=lambda c, dt: OpCost(
+            f"palette/{c.name}", 2.0 * c.dims[0] * c.dims[1] * c.dims[2],
+            float(_itemsize(dt)) * c.dims[0] * (c.dims[1] + c.dims[2])
+            + 0.5 * c.dims[1] * c.dims[2] + 64.0),   # packed nibbles + codebook
+    ))
+
+
+# ---------------------------------------------------------------------------
+# sparse — 1:2 pair-structured sparse weights, streamed compressed
+# ---------------------------------------------------------------------------
+
+
+def _sparse_inputs(case: ShapeCase, dtype, rng) -> dict:
+    from repro.kernels.sparse.sparse_matmul import pack_pair_sparse
+
+    m, k, n = case.dims
+    vals, sel = pack_pair_sparse(rng.normal(size=(k, n)).astype(np.float32))
+    return {"a": _normal(rng, (m, k), dtype),
+            "values": jnp.asarray(vals), "selector": jnp.asarray(sel)}
+
+
+def _register_sparse() -> None:
+    from repro.kernels.sparse.sparse_matmul import sparse_matmul
+    from repro.kernels.sparse.ref import sparse_matmul_ref
+
+    register(KernelSpec(
+        name="sparse",
+        capability_op="matmul",
+        weight_form=WeightForm.SPARSE,
+        dtypes=(jnp.float32, jnp.bfloat16),
+        cases=(
+            # K must be a multiple of 16 (selector bits pack 8 pairs/byte)
+            ShapeCase("aligned", (64, 256, 192)),
+            ShapeCase("wide", (96, 512, 128)),
+            ShapeCase("ragged", (48, 144, 72), edge=True),
+            ShapeCase("tiny", (8, 32, 16), edge=True),
+        ),
+        make_inputs=_sparse_inputs,
+        run_kernel=lambda i: sparse_matmul(i["a"], i["values"], i["selector"]),
+        run_oracle=lambda i: sparse_matmul_ref(i["a"], i["values"],
+                                               i["selector"]),
+        tol=_mm_tol,
+        cost=lambda c, dt: OpCost(
+            f"sparse/{c.name}", 2.0 * c.dims[0] * c.dims[1] * c.dims[2],
+            float(_itemsize(dt)) * c.dims[0] * (c.dims[1] + c.dims[2])
+            + c.dims[1] * c.dims[2] * (1.0 + 1.0 / 16.0)),  # values + selector
+    ))
+
+
+# ---------------------------------------------------------------------------
+# flash — fused attention, online softmax
+# ---------------------------------------------------------------------------
+
+
+def _flash_inputs(case: ShapeCase, dtype, rng) -> dict:
+    b, h, kvh, sq, skv, d = case.dims
+    return {"q": _normal(rng, (b, h, sq, d), dtype),
+            "k": _normal(rng, (b, kvh, skv, d), dtype),
+            "v": _normal(rng, (b, kvh, skv, d), dtype)}
+
+
+def _flash_tol(dtype) -> tuple[float, float]:
+    return (2e-3, 2e-3) if dtype == jnp.float32 else (3e-2, 3e-2)
+
+
+def _flash_vjp(inputs: dict):
+    from repro.kernels.flash import ops as flash_ops
+    from repro.kernels.flash.ref import flash_attention_ref
+
+    q = inputs["q"].astype(jnp.float32)
+    k = inputs["k"].astype(jnp.float32)
+    v = inputs["v"].astype(jnp.float32)
+    return (lambda q, k, v: flash_ops.attention(q, k, v).sum(),
+            lambda q, k, v: flash_attention_ref(q, k, v).sum(), (q, k, v))
+
+
+def _register_flash() -> None:
+    from repro.kernels.flash.flash_attention import flash_attention
+    from repro.kernels.flash.ref import flash_attention_ref
+
+    register(KernelSpec(
+        name="flash",
+        capability_op="attention_fused",
+        dtypes=(jnp.float32, jnp.bfloat16, jnp.float16),
+        cases=(
+            # dims = (B, H, KVH, Sq, Skv, d)
+            ShapeCase("gqa", (2, 4, 2, 128, 128, 64)),
+            ShapeCase("mha", (1, 4, 4, 128, 128, 32)),
+            ShapeCase("ragged", (1, 2, 2, 100, 100, 32), edge=True),
+            ShapeCase("odd_len", (1, 2, 1, 77, 77, 16), edge=True),
+        ),
+        make_inputs=_flash_inputs,
+        run_kernel=lambda i: flash_attention(i["q"], i["k"], i["v"],
+                                             causal=True, bq=64, bk=64),
+        run_oracle=lambda i: flash_attention_ref(i["q"], i["k"], i["v"],
+                                                 causal=True),
+        tol=_flash_tol,
+        cost=lambda c, dt: OpCost(
+            f"flash/{c.name}",
+            4.0 * c.dims[0] * c.dims[1] * c.dims[3] * c.dims[4] * c.dims[5],
+            float(_itemsize(dt)) * c.dims[0] * c.dims[5]
+            * (c.dims[1] * c.dims[3] * 2 + c.dims[2] * c.dims[4] * 2)),
+        make_vjp=_flash_vjp,
+    ))
+
+
+# ---------------------------------------------------------------------------
+# decode_attention — one-token GQA decode against a long cache
+# ---------------------------------------------------------------------------
+
+
+def _decode_inputs(case: ShapeCase, dtype, rng) -> dict:
+    b, h, kvh, s, d, length = case.dims
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+    return {"q": _normal(rng, (b, h, d), dtype),
+            "k_cache": _normal(rng, (b, s, kvh, d), dtype),
+            "v_cache": _normal(rng, (b, s, kvh, d), dtype),
+            "positions": jnp.where(pos < length, pos, -1),
+            "current": jnp.full((b,), length - 1, jnp.int32)}
+
+
+def _register_decode() -> None:
+    from repro.kernels.flash.decode_attention import (decode_attention,
+                                                      decode_attention_ref)
+
+    register(KernelSpec(
+        name="decode_attention",
+        # The cache-slot select is a gather at heart: H13/M1 has no native
+        # gather (hal.T4.1), so the dispatcher's matrix falls this kernel
+        # back to the oracle there — the paper's op-by-device cell, live.
+        capability_op="gather",
+        dtypes=(jnp.float32, jnp.bfloat16),
+        cases=(
+            # dims = (B, H, KVH, S, d, written_length)
+            ShapeCase("gqa", (2, 8, 2, 256, 64, 200)),
+            ShapeCase("mha", (1, 4, 4, 128, 32, 100)),
+            ShapeCase("ragged", (3, 4, 2, 96, 64, 50), edge=True),
+            ShapeCase("short_cache", (2, 4, 1, 24, 16, 9), edge=True),
+        ),
+        make_inputs=_decode_inputs,
+        run_kernel=lambda i: decode_attention(
+            i["q"], i["k_cache"], i["v_cache"], i["positions"], i["current"],
+            bk=64),
+        run_oracle=lambda i: decode_attention_ref(
+            i["q"], i["k_cache"], i["v_cache"], i["positions"], i["current"]),
+        tol=_flash_tol,
+        cost=lambda c, dt: OpCost(
+            f"decode_attention/{c.name}",
+            4.0 * c.dims[0] * c.dims[1] * c.dims[3] * c.dims[4],
+            float(_itemsize(dt)) * 2.0
+            * c.dims[0] * c.dims[3] * c.dims[2] * c.dims[4]),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# act_lut — 33-knot piecewise-linear activation evaluation
+# ---------------------------------------------------------------------------
+
+
+def _act_lut_inputs(case: ShapeCase, dtype, rng) -> dict:
+    from repro.core.numerics import build_lut
+
+    (n,) = case.dims
+    table = build_lut("sigmoid")
+    lo, hi = table.xs[0], table.xs[-1]
+    x = rng.uniform(lo - 2.0, hi + 2.0, size=(n,)).astype(np.float32)
+    return {"x": jnp.asarray(x, dtype), "table": table, "name": "sigmoid"}
+
+
+def _register_act_lut() -> None:
+    from repro.kernels.act_lut.ops import lut_activation
+    from repro.kernels.act_lut.ref import act_lut_ref
+
+    register(KernelSpec(
+        name="act_lut",
+        capability_op="sigmoid",
+        dtypes=(jnp.float32, jnp.bfloat16),
+        cases=(
+            ShapeCase("block", (1024,)),
+            ShapeCase("long", (4096,)),
+            ShapeCase("ragged", (1311,), edge=True),
+            ShapeCase("tiny", (7,), edge=True),
+        ),
+        make_inputs=_act_lut_inputs,
+        run_kernel=lambda i: lut_activation(i["name"])(i["x"]),
+        run_oracle=lambda i: jnp.asarray(
+            act_lut_ref(np.asarray(i["x"], np.float64), i["table"]),
+            jnp.float32),
+        # the PWL table itself is fp16-grid accurate; bf16 x adds input rounding
+        tol=lambda dt: (0.0, 2e-3) if dt == jnp.float32 else (0.0, 2e-2),
+        cost=lambda c, dt: OpCost(
+            f"act_lut/{c.name}", 40.0 * c.dims[0],   # 32 compares + PWL eval
+            2.0 * float(_itemsize(dt)) * c.dims[0]),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Registration (import-time, idempotent via the duplicate guard)
+# ---------------------------------------------------------------------------
+
+
+for _reg in (_register_anemm, _register_palette, _register_sparse,
+             _register_flash, _register_decode, _register_act_lut):
+    _reg()

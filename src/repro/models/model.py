@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.kernels import compat
 from repro.models import encdec as encdec_lib
 from repro.models import transformer as tf_lib
 from repro.models.layers import (Params, apply_norm, embed_tokens, init_embed,
@@ -68,6 +69,16 @@ class Model:
                                            sig, self.dtype),
             }
         return params
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def named_leaves(tree: Params) -> list[tuple[str, Any]]:
+        """(path, leaf) pairs over a param/cache tree, rendered "a/b/0/c" —
+        the naming the sharding rules and checkpoint layout key on. Goes
+        through the version-adaptive pytree surface (`kernels.compat`): the
+        path-aware flatten moved modules between jax 0.4.x and 0.5+."""
+        leaves, _ = compat.tree_flatten_with_path(tree)
+        return [(compat.tree_path_str(p), leaf) for p, leaf in leaves]
 
     # ------------------------------------------------------------------
     def _backbone(self, params, x, positions, *, mode, caches=None,

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import compat
 from repro.models.layers import Params, apply_mlp, init_mlp
 from repro.parallel.ctx import ParallelContext
 
@@ -116,7 +117,7 @@ def _ep_block(cfg: ModelConfig, capacity_src: int, x_loc, router_w, wg, wu, wd):
     """Per-device body. x_loc: (T_m, d) — this rank's EXCLUSIVE token slice
     (the caller does the sequence split); expert banks are local shards
     (E_loc, ...). Returns this rank's token outputs (T_m, d)."""
-    msize = jax.lax.axis_size("model")
+    msize = compat.axis_size("model")
     t_m, d = x_loc.shape
     k = cfg.experts_per_token
     e_loc = cfg.n_experts // msize

@@ -100,19 +100,6 @@ _CACHE_RULES: list[tuple[str, dict[int, Any]]] = [
 ]
 
 
-def _flatten_with_paths(tree, prefix="") -> list[tuple[str, Any]]:
-    out = []
-    if isinstance(tree, dict):
-        for k in sorted(tree):
-            out += _flatten_with_paths(tree[k], f"{prefix}/{k}" if prefix else str(k))
-    elif isinstance(tree, (list, tuple)):
-        for i, v in enumerate(tree):
-            out += _flatten_with_paths(v, f"{prefix}/{i}")
-    else:
-        out.append((prefix, tree))
-    return out
-
-
 # FSDP ("data"-axis weight sharding) only pays above this size: below it the
 # whole shard fits trivially in HBM and GSPMD may otherwise choose to
 # contract over the sharded weight dim (an activation-sized all-reduce)

@@ -1,0 +1,172 @@
+"""Direct coverage for core/compression.py round-trips and core/segmenter.py
+partition invariants — the two modules the technique tests exercised only
+sideways (through error bounds and cost comparisons) before."""
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import compression as cp
+from repro.core import costmodel, hal
+from repro.core import segmenter as sg
+from repro.core.hal import WeightForm
+
+rng = np.random.default_rng(7)
+
+
+class TestCompressionRoundTrip:
+    """palettize -> pack -> unpack -> dequantize comes back shape- and
+    value-faithful for every form, including the non-obvious layouts."""
+
+    @pytest.mark.parametrize("form", [WeightForm.FP16, WeightForm.INT8,
+                                      WeightForm.INT4_PALETTE,
+                                      WeightForm.SPARSE, WeightForm.BLOCKWISE])
+    def test_decode_restores_shape_and_dtype(self, form):
+        w = rng.normal(size=(64, 48)).astype(np.float32)
+        p = cp.encode(form, w)
+        out = np.asarray(cp.decode(p), np.float32)
+        assert out.shape == w.shape
+        assert np.all(np.isfinite(out))
+
+    def test_int8_round_trip_is_quantization_exact(self):
+        # values already on the int8 grid survive the trip bit-exactly
+        scale = 0.5
+        q = rng.integers(-127, 128, size=(32, 16)).astype(np.float32)
+        q[0, :] = 127      # pin per-channel max so the encoder recovers scale
+        w = q * scale
+        out = np.asarray(cp.decode(cp.encode(WeightForm.INT8, w)), np.float32)
+        np.testing.assert_allclose(out, w)    # bit-exact: on-grid, fp16-safe
+
+    def test_palette_round_trip_on_palettized_weight(self):
+        # a weight drawn FROM a 16-entry codebook round-trips to codebook
+        # values exactly (up to fp16 storage of the lut)
+        code = np.linspace(-1.0, 1.0, 16).astype(np.float32)
+        w = rng.choice(code, size=(40, 24)).astype(np.float32)
+        p = cp.encode(WeightForm.INT4_PALETTE, w)
+        out = np.asarray(cp.decode(p), np.float32)
+        np.testing.assert_allclose(out, w, atol=2e-3)
+        # packed payload is half a byte per element (+ codebook)
+        assert p.payload["packed"].size == (w.size + 1) // 2
+        assert p.payload["lut"].size == 16
+
+    def test_palette_low_nibble_first_layout(self):
+        # the worked-example layout (paper §7.2): index[0] in the low nibble
+        w = np.array([1.0, 0.0, 0.0, 1.0], np.float32).reshape(4, 1)
+        p = cp.encode(WeightForm.INT4_PALETTE, w)
+        packed = p.payload["packed"]
+        lut = np.asarray(p.payload["lut"], np.float32)
+        assert lut[packed[0] & 0xF] == pytest.approx(1.0, abs=1e-3)
+        assert lut[packed[0] >> 4] == pytest.approx(0.0, abs=1e-3)
+
+    def test_sparse_round_trip_keeps_survivors_zeroes_rest(self):
+        w = rng.normal(size=(32, 8)).astype(np.float32)
+        p = cp.encode(WeightForm.SPARSE, w)
+        out = np.asarray(cp.decode(p), np.float32)
+        pairs_in = w.reshape(-1, 2, 8)
+        pairs_out = out.reshape(-1, 2, 8)
+        keep_hi = np.abs(pairs_in[:, 1]) > np.abs(pairs_in[:, 0])
+        survivor_in = np.where(keep_hi, pairs_in[:, 1], pairs_in[:, 0])
+        survivor_out = np.where(keep_hi, pairs_out[:, 1], pairs_out[:, 0])
+        dropped_out = np.where(keep_hi, pairs_out[:, 0], pairs_out[:, 1])
+        np.testing.assert_allclose(survivor_out, survivor_in, atol=2e-2)
+        assert np.all(dropped_out == 0.0)
+        # exactly one survivor per pair -> exactly 50% density
+        assert cp.fraction_zero(out) == pytest.approx(0.5)
+
+    def test_blockwise_round_trip_block_structure(self):
+        # per-block scales: a block with tiny values keeps fine resolution
+        # even when another block holds a huge outlier
+        w = rng.normal(size=(64, 8)).astype(np.float32) * 0.01
+        w[40, 3] = 100.0                      # outlier in block 1 of column 3
+        p = cp.encode(WeightForm.BLOCKWISE, w)
+        out = np.asarray(cp.decode(p), np.float32)
+        np.testing.assert_allclose(out[:32], w[:32], atol=1e-3)   # clean block
+        assert out[40, 3] == pytest.approx(100.0, rel=0.02)
+
+    def test_stored_bytes_ordering_matches_hal_table(self):
+        # int4 < int8 ~ blockwise < fp16 stored footprint
+        w = rng.normal(size=(256, 128)).astype(np.float32)
+        stored = {f: cp.encode(f, w).stored_bytes
+                  for f in (WeightForm.INT4_PALETTE, WeightForm.INT8,
+                            WeightForm.BLOCKWISE, WeightForm.FP16)}
+        assert stored[WeightForm.INT4_PALETTE] < stored[WeightForm.INT8]
+        assert stored[WeightForm.INT8] <= stored[WeightForm.BLOCKWISE]
+        assert stored[WeightForm.BLOCKWISE] < stored[WeightForm.FP16]
+
+
+class TestSegmenterInvariants:
+    """Partition invariants of the Dijkstra placement (paper §5.3)."""
+
+    def _ops(self, n=8):
+        cfg = configs.get_config("tinyllama-1.1b")
+        return costmodel.op_graph(cfg, configs.SHAPES["decode_32k"])[:n]
+
+    def test_placement_covers_every_op_in_order(self):
+        ops = self._ops()
+        p = sg.place(ops, sg.ANE_BACKENDS)
+        assert p.ops == [o.name for o in ops]
+        assert len(p.backend) == len(ops)
+        valid = {b.name for b in sg.ANE_BACKENDS}
+        assert set(p.backend) <= valid
+
+    def test_segments_partition_the_op_list(self):
+        # segments are a partition: counts sum to n, runs are maximal
+        ops = self._ops()
+        p = sg.place(ops, sg.ANE_BACKENDS)
+        segs = p.segments
+        assert sum(c for _, c in segs) == len(ops)
+        for (b1, _), (b2, _) in zip(segs, segs[1:]):
+            assert b1 != b2, "adjacent segments must differ (maximal runs)"
+
+    def test_cost_is_sum_of_op_costs_plus_boundaries(self):
+        ops = self._ops(6)
+        launch, xfer = 0.23e-3, 24e9
+        p = sg.place(ops, sg.ANE_BACKENDS, launch_penalty=launch,
+                     transfer_bytes_per_s=xfer)
+        by_name = {b.name: b for b in sg.ANE_BACKENDS}
+        expect = launch + by_name[p.backend[0]].op_cost(ops[0])
+        for i in range(1, len(ops)):
+            expect += by_name[p.backend[i]].op_cost(ops[i])
+            if p.backend[i] != p.backend[i - 1]:
+                expect += launch + ops[i - 1].bytes / xfer
+        assert p.cost == pytest.approx(expect, rel=1e-9)
+
+    def test_rejected_op_never_assigned(self):
+        backends = (
+            sg.Backend("ane", 12e12, 51e9, rejects=frozenset({"mlp"})),
+            sg.Backend("gpu", 2.6e12, 230e9),
+        )
+        p = sg.place(self._ops(), backends)
+        for name, b in zip(p.ops, p.backend):
+            if "mlp" in name:
+                assert b == "gpu"
+
+    def test_all_ops_rejected_raises(self):
+        only = (sg.Backend("ane", 12e12, 51e9, rejects=frozenset({"embed"})),)
+        with pytest.raises(ValueError, match="no feasible placement"):
+            sg.place(self._ops(2), only)
+
+    def test_single_op_graph(self):
+        ops = self._ops(1)
+        p = sg.place(ops, sg.ANE_BACKENDS)
+        assert len(p.backend) == 1 and p.segments == [(p.backend[0], 1)]
+
+    def test_empty_graph(self):
+        p = sg.place([], sg.ANE_BACKENDS)
+        assert p.ops == [] and p.cost == 0.0
+
+    def test_zero_transfer_cost_matches_greedy_per_op_optimum(self):
+        # with free boundaries (and no launch penalty), the shortest path is
+        # exactly per-op argmin — the partition degenerates as theory says
+        ops = self._ops(6)
+        p = sg.place(ops, sg.ANE_BACKENDS, launch_penalty=0.0,
+                     transfer_bytes_per_s=float("inf"))
+        for op, b_name in zip(ops, p.backend):
+            best = min(sg.ANE_BACKENDS, key=lambda b: b.op_cost(op))
+            assert b_name == best.name
+
+    def test_matches_brute_force_on_tpu_backends(self):
+        ops = self._ops(6)
+        d = sg.place(ops, sg.TPU_BACKENDS)
+        b = sg.brute_force(ops, sg.TPU_BACKENDS)
+        assert d.cost == pytest.approx(b.cost, rel=1e-12)

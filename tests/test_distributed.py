@@ -24,6 +24,7 @@ def run8(body: str, timeout=600) -> str:
     return r.stdout
 
 
+@pytest.mark.slow
 def test_moe_ep_matches_dense_reference():
     out = run8("""
         import jax, jax.numpy as jnp, numpy as np
@@ -54,6 +55,7 @@ def test_moe_ep_matches_dense_reference():
     assert "EP==DENSE OK" in out
 
 
+@pytest.mark.slow
 def test_moe_ep_capacity_drops_are_bounded():
     out = run8("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
@@ -77,6 +79,7 @@ def test_moe_ep_capacity_drops_are_bounded():
     assert "EP-drops OK" in out
 
 
+@pytest.mark.slow
 def test_sharded_train_step_runs_and_matches_single_device():
     out = run8("""
         import jax, jax.numpy as jnp, numpy as np

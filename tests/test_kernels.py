@@ -32,6 +32,7 @@ DTYPES = [jnp.float32, jnp.bfloat16, jnp.float16]
 
 
 class TestAnemm:
+    @pytest.mark.slow
     @pytest.mark.parametrize("shape", MM_SHAPES)
     @pytest.mark.parametrize("dtype", DTYPES)
     def test_vs_oracle(self, shape, dtype):
@@ -71,6 +72,7 @@ class TestAnemm:
 
 
 class TestPalette:
+    @pytest.mark.slow
     @pytest.mark.parametrize("shape", [(64, 256, 192), (32, 128, 64),
                                        (128, 512, 256)])
     def test_vs_oracle(self, shape):
@@ -99,6 +101,7 @@ class TestPalette:
 
 
 class TestSparse:
+    @pytest.mark.slow
     @pytest.mark.parametrize("shape", [(64, 256, 192), (16, 128, 64),
                                        (96, 512, 128)])
     def test_vs_oracle(self, shape):
@@ -148,6 +151,7 @@ class TestActLut:
 
 
 class TestFlash:
+    @pytest.mark.slow
     @pytest.mark.parametrize("cfg", [
         (2, 4, 2, 128, 128, 64, True, None),
         (1, 8, 8, 100, 100, 32, True, None),
@@ -195,6 +199,7 @@ class TestFlash:
 class TestDecodeAttention:
     """One-token GQA decode against a long cache (the serving hot path)."""
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("cfg", [
         (2, 8, 2, 256, 64, None, 200),
         (1, 4, 1, 128, 32, None, 100),

@@ -15,6 +15,12 @@ from repro.models.model import build_model
 
 ARCHS = configs.ARCH_NAMES
 
+# The per-arch sweeps are the bulk of suite wall time. The fast lane
+# (-m "not slow") keeps one representative per family; tier-1 runs them all.
+_FAST_ARCHS = {"tinyllama-1.1b", "mamba2-1.3b"}
+ARCH_SWEEP = [pytest.param(a, marks=() if a in _FAST_ARCHS
+                           else (pytest.mark.slow,)) for a in ARCHS]
+
 
 def _batch(cfg, b=2, s=32, seed=0):
     rng = np.random.default_rng(seed)
@@ -26,7 +32,7 @@ def _batch(cfg, b=2, s=32, seed=0):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_SWEEP)
 class TestSmoke:
     def test_train_step_finite_shapes(self, arch):
         cfg = configs.get_smoke(arch)
@@ -56,7 +62,7 @@ class TestSmoke:
         assert np.all(np.isfinite(np.asarray(lg)))
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_SWEEP)
 def test_decode_matches_full_forward(arch):
     """Prefill p tokens, decode the rest one by one; per-step logits must
     match the teacher-forced full forward (same tokens) to fp tolerance."""
@@ -103,16 +109,16 @@ def test_sliding_window_cache_is_bounded():
     cfg = configs.get_smoke("recurrentgemma-9b")
     m = build_model(cfg)
     caches = m.init_cache(batch=1, max_len=10_000)
-    leaves = jax.tree.leaves(caches)
+    leaves = jax.tree_util.tree_leaves(caches)
     assert all(l.size < 1_000_000 for l in leaves)
     # attention cache time axis == window, not max_len
-    flat = jax.tree.flatten_with_path(caches)[0]
-    for path, leaf in flat:
-        name = str(path[-1])
-        if "'k'" in name or "'v'" in name:
+    for path, leaf in m.named_leaves(caches):
+        name = path.rsplit("/", 1)[-1]
+        if name in ("k", "v"):
             assert leaf.shape[-3] == cfg.attn_window
 
 
+@pytest.mark.slow
 def test_mtp_loss_present_for_deepseek():
     cfg = configs.get_smoke("deepseek-v3-671b")
     m = build_model(cfg)
@@ -137,7 +143,7 @@ def test_moe_dense_routes_topk():
     assert 0.5 < float(aux) < 4.0
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_SWEEP)
 def test_causality(arch):
     """Logits at position i must not depend on tokens at positions > i.
 

@@ -1,7 +1,14 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+Degrades to a module-level skip when hypothesis is absent (it is an optional
+test dependency — see requirements-test.txt); CI installs it so these run."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-test.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import compression as cp, hal, numerics as nu, segmenter as sg
 from repro.core.costmodel import OpCost

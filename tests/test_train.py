@@ -20,6 +20,7 @@ from repro.runtime.fault_tolerance import (RestartPolicy, StragglerDetector,
                                            Heartbeat, run_with_restarts)
 
 
+@pytest.mark.slow
 def test_loss_decreases_tinyllama_smoke():
     out = train_mod.run(["--arch", "tinyllama-1.1b", "--smoke",
                          "--steps", "60", "--batch", "8", "--seq", "64",
@@ -30,6 +31,7 @@ def test_loss_decreases_tinyllama_smoke():
     assert np.isfinite(hist[-1])
 
 
+@pytest.mark.slow
 def test_grad_compression_trains():
     out = train_mod.run(["--arch", "tinyllama-1.1b", "--smoke",
                          "--steps", "40", "--batch", "8", "--seq", "64",
@@ -38,6 +40,7 @@ def test_grad_compression_trains():
     assert out["loss_history"][-1] < out["loss_history"][0] - 0.3
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_resumes_deterministically():
     """Train 30 steps straight vs 15 + crash + resume 15: identical params
     (the data pipeline is a pure function of (seed, step))."""
