@@ -72,4 +72,25 @@ loss, _ = jax.jit(model.loss)(params, batch)
 caches, logits = jax.jit(model.prefill)(params, batch)
 print(f"loss={float(loss):.3f}; prefill logits {logits.shape}; "
       f"all 10 archs: {configs.ARCH_NAMES}")
+
+print("\n=== C7: dispatcher-routed compressed serving (§4 + §7, end to end) ===")
+from collections import Counter
+
+from repro.optim.compression import compress_model_params, weight_form_census
+
+dispatcher = dispatch.KernelDispatcher(hal.TPU_V5E)
+served = build_model(cfg, dispatcher=dispatcher)
+cparams = compress_model_params(params, hal.WeightForm.INT4_PALETTE)
+print(f"packed {len(weight_form_census(cparams))} matmul weights as "
+      f"int4_palette; every matmul now routes op-by-device")
+pcache = dispatch.ProgramCache()
+prefill, _ = pcache.compile(served.prefill, cparams, batch)
+prefill(cparams, batch)                     # request 1: compile + dispatch
+pcache.compile(served.prefill, cparams, batch)  # request 2: content-hash hit
+assert pcache.stats.hits > 0, \
+    "second identical request must hit the program cache (anehash warm start)"
+census = Counter((r.kernel, r.backend) for r in dispatcher.routes)
+print(f"program cache: hits={pcache.stats.hits} misses={pcache.stats.misses}; "
+      f"routes: {dict(census)}")
+
 print("\nquickstart OK")

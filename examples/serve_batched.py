@@ -2,10 +2,12 @@
 
     PYTHONPATH=src python examples/serve_batched.py --arch mamba2-1.3b
 
-Compile once, keep KV/SSM state resident (donated buffers), batch requests
-to amortize the dispatch floor (paper §9.4), report tokens/s. Works for any
-of the 10 architectures in reduced form on CPU; the same driver serves the
-full configs on a pod.
+Compile once (content-hash program cache), route every matmul op-by-device
+through the kernel dispatcher (packed weights stream through the
+palette/sparse kernels), keep KV/SSM state resident (donated buffers),
+batch requests to amortize the dispatch floor (paper §9.4), report
+tokens/s. Works for any of the 10 architectures in reduced form on CPU;
+the same driver serves the full configs on a pod.
 """
 
 import argparse
@@ -21,21 +23,35 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=48)
+    ap.add_argument("--weight-form", default="fp16",
+                    choices=serve.WEIGHT_FORMS)
     args = ap.parse_args()
 
-    print(f"serving {args.arch} (reduced config), batch={args.batch}")
+    print(f"serving {args.arch} (reduced config), batch={args.batch}, "
+          f"weights={args.weight_form}, two identical requests")
     out = serve.run(["--arch", args.arch, "--smoke",
                      "--batch", str(args.batch),
                      "--prompt-len", str(args.prompt_len),
-                     "--gen", str(args.gen)])
+                     "--gen", str(args.gen),
+                     "--weight-form", args.weight_form,
+                     "--requests", "2"])
+    # compile-once discipline: the second identical request must warm-start
+    # from the content-hash program cache — a zero hit rate means some
+    # direct-matmul path bypassed the dispatcher/compile route.
+    assert out["cache_hits"] > 0, \
+        "second request missed the ProgramCache: the dispatched serving " \
+        "path is being bypassed"
     print(f"generated {out['tokens'].shape[1]} tokens x {args.batch} requests "
-          f"at {out['tok_per_s']:.1f} tok/s (CPU, reduced model)")
+          f"at {out['tok_per_s']:.1f} tok/s (CPU, reduced model); "
+          f"program-cache hits={out['cache_hits']} "
+          f"misses={out['cache_misses']}; routes={out.get('routes')}")
     # batching amortization, the paper's §9.4 point:
     single = serve.run(["--arch", args.arch, "--smoke", "--batch", "1",
                         "--prompt-len", str(args.prompt_len),
-                        "--gen", str(args.gen)])
-    amort = (out["tok_per_s"] / args.batch) / max(single["tok_per_s"], 1e-9)
-    print(f"per-request throughput vs batch=1: {out['tok_per_s']/single['tok_per_s']:.1f}x "
+                        "--gen", str(args.gen),
+                        "--weight-form", args.weight_form])
+    print(f"per-request throughput vs batch=1: "
+          f"{out['tok_per_s']/single['tok_per_s']:.1f}x "
           f"from batching (dispatch-floor amortization)")
 
 

@@ -10,6 +10,10 @@ Layout (one directory per step):
 Properties the tests exercise:
   * atomicity: a crash mid-write never yields a loadable-but-wrong state
     (restore only considers COMMITted steps);
+  * weight-form tags: a `models.dispatched.DispatchedWeight` node (packed
+    weight + `WeightForm` tag) flattens into its payload arrays plus a
+    `__weightform__` marker, and restores as the same tagged node — a
+    compressed-serving checkpoint round-trips without folding to dense;
   * async: `save_async` snapshots device arrays to host, then writes on a
     background thread while training continues (the paper's resident-state
     rule inverted: state crosses the host boundary only at checkpoints);
@@ -30,14 +34,21 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from repro.models.dispatched import DispatchedWeight
+
 _SEP = "/"
+_FORM_KEY = "__weightform__"
 
 
 def _flatten(tree) -> dict[str, Any]:
     flat = {}
 
     def walk(node, prefix):
-        if isinstance(node, dict):
+        if isinstance(node, DispatchedWeight):
+            # payload arrays under the node's path + the form tag marker
+            flat[f"{prefix}{_SEP}{_FORM_KEY}"] = np.asarray(node.form.value)
+            walk(node.payload, prefix)
+        elif isinstance(node, dict):
             for k in sorted(node):
                 walk(node[k], f"{prefix}{_SEP}{k}" if prefix else str(k))
         elif isinstance(node, (list, tuple)):
@@ -54,6 +65,20 @@ def _flatten(tree) -> dict[str, Any]:
 
 def _unflatten_into(template, flat: dict[str, Any]):
     def walk(node, prefix):
+        if isinstance(node, DispatchedWeight):
+            stored = flat.get(f"{prefix}{_SEP}{_FORM_KEY}")
+            if stored is None:
+                raise ValueError(
+                    f"checkpoint weight form mismatch at {prefix!r}: template "
+                    f"expects a packed {node.form.value!r} weight but the "
+                    f"checkpoint holds a dense one (no {_FORM_KEY} marker)")
+            if str(stored) != node.form.value:
+                raise ValueError(
+                    f"checkpoint weight form {str(stored)!r} at {prefix!r} "
+                    f"does not match template tag {node.form.value!r}")
+            payload = {k: flat[f"{prefix}{_SEP}{k}"] for k in node.payload}
+            return DispatchedWeight(node.form, node.contract_shape,
+                                    node.out_shape, node.dtype_name, payload)
         if isinstance(node, dict):
             return {k: walk(node[k], f"{prefix}{_SEP}{k}" if prefix else str(k))
                     for k in node}
@@ -159,5 +184,10 @@ class CheckpointManager:
                 flat[k] = None
                 continue
             arr = npz[k.replace(_SEP, "|")]
+            if k.endswith(f"{_SEP}{_FORM_KEY}"):
+                # weight-form marker: a host-side string tag, never a device
+                # array — elastic placers must not see it
+                flat[k] = arr
+                continue
             flat[k] = placer(k, arr) if placer else arr
         return _unflatten_into(template, flat), step

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import re
 import time
 from collections import deque
 from typing import Any, Callable, Hashable
@@ -39,7 +40,9 @@ def content_hash(fn: Callable, args_spec: Any, options: str = "") -> str:
     option changes it."""
     try:
         jaxpr = jax.make_jaxpr(fn)(*args_spec)
-        body = str(jaxpr)
+        # custom_vjp params print closure objects with their memory address;
+        # scrub addresses so structurally identical traces hash identically
+        body = re.sub(r"0x[0-9a-f]+", "0x", str(jaxpr))
     except Exception:  # fall back to function identity + specs
         body = f"{getattr(fn, '__name__', repr(fn))}"
     spec_txt = str(jax.tree.map(
@@ -62,14 +65,37 @@ class ProgramCache:
 
     def __init__(self) -> None:
         self._programs: dict[str, Any] = {}
+        # (fn, treedef, avals) -> content hash: a warm-start lookup must not
+        # pay the full retrace content_hash performs (the jaxpr of a repeat
+        # call is determined by the function + arg structure/avals)
+        self._hash_memo: dict[Any, tuple[str, Callable]] = {}
         self.stats = CacheStats()
+
+    def _key(self, fn: Callable, args_spec, options: str) -> str:
+        leaves, treedef = jax.tree.flatten(args_spec)
+        specs = tuple((getattr(x, "shape", None), str(getattr(x, "dtype", None)))
+                      for x in leaves)
+        # bound methods are re-created per attribute access: key on the
+        # underlying function + receiver id (the receiver is pinned in the
+        # memo value, so the id cannot be recycled while the entry lives)
+        fast = (getattr(fn, "__func__", fn), id(getattr(fn, "__self__", None)),
+                treedef, specs, options)
+        try:
+            hit = self._hash_memo.get(fast)
+        except TypeError:               # unhashable leaf/aux somewhere
+            return content_hash(fn, args_spec, options)
+        if hit is not None:
+            return hit[0]
+        key = content_hash(fn, args_spec, options)
+        self._hash_memo[fast] = (key, fn)
+        return key
 
     def compile(self, fn: Callable, *args_spec, options: str = "",
                 force_recompilation: bool = False, jit_kwargs: dict | None = None):
         """compile-or-hit. `force_recompilation` defeats the warm start and
         rewrites the entry unconditionally (the paper's documented inverse of
         force_fetch_from_cache)."""
-        key = content_hash(fn, args_spec, options)
+        key = self._key(fn, args_spec, options)
         if not force_recompilation and key in self._programs:
             self.stats.hits += 1
             return self._programs[key], key
@@ -83,10 +109,11 @@ class ProgramCache:
 
     def is_new_compile_required(self, fn: Callable, *args_spec,
                                 options: str = "") -> bool:
-        return content_hash(fn, args_spec, options) not in self._programs
+        return self._key(fn, args_spec, options) not in self._programs
 
     def purge(self) -> None:
         self._programs.clear()
+        self._hash_memo.clear()
 
 
 @dataclasses.dataclass

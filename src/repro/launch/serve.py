@@ -1,25 +1,43 @@
-"""Serving driver: batched prefill + decode with resident caches.
+"""Serving driver: dispatcher-routed batched prefill + decode, compile-once.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --smoke --batch 4 --prompt-len 64 --gen 32
+        --smoke --batch 4 --prompt-len 64 --gen 32 --weight-form int4_palette
 
-The paper's serving shape (ch. 2/14): compile once, keep the KV cache
-resident on-device across steps (donated buffers), send only the small
-per-step token, read logits back. Batched requests amortize the dispatch
-floor (§9.4: batching to 512 drops per-sample cost ~127x)."""
+The paper's serving shape (ch. 2/5/14), end to end:
+
+  * **op-by-device routing** — the model is built with a
+    `KernelDispatcher` for the configured HAL target, so every projection,
+    MLP, MoE expert, attention and logits matmul resolves against the
+    kernel registry: `anemm` for dense weights, `palette`/`sparse` for
+    packed ones (`--weight-form`), with oracle fallback wherever the target
+    gates the op/form/dtype (`--target ane-m1` exercises it live).
+  * **compile once, dispatch many** — prefill and decode compile through
+    the content-hash `ProgramCache`; a second identical request hits the
+    cache (the anehash warm start, §5.6).
+  * **resident state** — the KV cache is a donated argument of the decode
+    program: the held buffer never re-crosses the host between steps.
+
+Batched requests amortize the dispatch floor (§9.4: batching to 512 drops
+per-sample cost ~127x)."""
 
 from __future__ import annotations
 
 import argparse
 import time
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import hal
+from repro.core.dispatch import KernelDispatcher, ProgramCache
 from repro.models.model import build_model
+from repro.optim.compression import compress_model_params
 from repro.parallel.ctx import ParallelContext
+
+WEIGHT_FORMS = ("fp16", "int4_palette", "sparse")
 
 
 def run(argv=None) -> dict:
@@ -32,11 +50,29 @@ def run(argv=None) -> dict:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--greedy", action="store_true", default=True)
+    ap.add_argument("--weight-form", default="fp16", choices=WEIGHT_FORMS,
+                    help="pack matmul weights into this streamed form")
+    ap.add_argument("--target", default="tpu-v5e",
+                    choices=sorted(hal.TARGETS),
+                    help="HAL target whose capability surface gates routing")
+    ap.add_argument("--no-dispatch", action="store_true",
+                    help="bypass the dispatcher (seed dense path; "
+                         "incompatible with a packed --weight-form)")
+    ap.add_argument("--requests", type=int, default=1,
+                    help="identical request rounds; round 2+ must hit the "
+                         "program cache")
     args = ap.parse_args(argv)
 
+    if args.no_dispatch and args.weight_form != "fp16":
+        ap.error("packed weight forms require the dispatcher")
+
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
-    model = build_model(cfg, ParallelContext(mesh=None))
+    dispatcher = None if args.no_dispatch else \
+        KernelDispatcher(hal.get_target(args.target))
+    model = build_model(cfg, ParallelContext(mesh=None), dispatcher=dispatcher)
     params = model.init(jax.random.PRNGKey(args.seed))
+    if args.weight_form != "fp16":
+        params = compress_model_params(params, args.weight_form)
 
     rng = np.random.default_rng(args.seed)
     b, s = args.batch, args.prompt_len
@@ -47,10 +83,26 @@ def run(argv=None) -> dict:
             rng.normal(size=(b, cfg.encoder_len, cfg.d_model)), model.dtype)
 
     max_len = s + args.gen
-    # compile once (content-hash cached), dispatch many
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    program_cache = ProgramCache()
+    out: dict = {}
+    for _ in range(max(args.requests, 1)):
+        out = _serve_one(model, params, batch, program_cache, cfg, args,
+                         max_len)
+    out["cache_hits"] = program_cache.stats.hits
+    out["cache_misses"] = program_cache.stats.misses
+    if dispatcher is not None:
+        out["routes"] = dict(Counter(
+            (r.kernel, r.backend) for r in dispatcher.routes))
+    return out
 
+
+def _serve_one(model, params, batch, program_cache: ProgramCache, cfg, args,
+               max_len: int) -> dict:
+    """One request round: compile-or-hit prefill + decode, then the decode
+    loop with the cache buffers donated (resident) across dispatches."""
+    b, s = batch["tokens"].shape
+
+    prefill, _ = program_cache.compile(model.prefill, params, batch)
     t0 = time.perf_counter()
     pf_caches, logits = prefill(params, batch)
     jax.block_until_ready(logits)
@@ -62,6 +114,11 @@ def run(argv=None) -> dict:
 
     tok = jnp.argmax(logits[:, -1, : cfg.vocab], axis=-1
                      ).astype(jnp.int32)[:, None]
+    pos0 = jnp.full((b,), s, jnp.int32)
+    decode, _ = program_cache.compile(
+        model.decode_step, params, caches, tok, pos0,
+        jit_kwargs={"donate_argnums": (1,)})
+
     out_tokens = [np.asarray(tok)]
     t0 = time.perf_counter()
     for i in range(args.gen - 1):
@@ -76,7 +133,8 @@ def run(argv=None) -> dict:
     gen = np.concatenate(out_tokens, axis=1)
     print(f"prefill {b}x{s}: {t_prefill*1e3:.1f} ms | "
           f"decode {args.gen-1} steps: {t_decode*1e3:.1f} ms "
-          f"({toks_per_s:.1f} tok/s)")
+          f"({toks_per_s:.1f} tok/s) | program cache "
+          f"h{program_cache.stats.hits}/m{program_cache.stats.misses}")
     return {"tokens": gen, "prefill_s": t_prefill, "decode_s": t_decode,
             "tok_per_s": toks_per_s}
 

@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import Params, apply_rope, dot, einsum32, rms_head_norm
+from repro.models import dispatched as dsp
+from repro.models.layers import Params, apply_rope, einsum32, rms_head_norm
 
 NEG_INF = -1e30
 
@@ -282,13 +283,9 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
 
 
 def _qkv(cfg: ModelConfig, p: Params, x: jnp.ndarray, positions: jnp.ndarray):
-    q = einsum32("bsd,dhk->bshk", x, p["wq"])
-    k = einsum32("bsd,dhk->bshk", x, p["wk"])
-    v = einsum32("bsd,dhk->bshk", x, p["wv"])
-    if "bq" in p:
-        q = q + p["bq"].astype(q.dtype)
-        k = k + p["bk"].astype(k.dtype)
-        v = v + p["bv"].astype(v.dtype)
+    q = dsp.linear(x, p["wq"], bias=p.get("bq"))
+    k = dsp.linear(x, p["wk"], bias=p.get("bk"))
+    v = dsp.linear(x, p["wv"], bias=p.get("bv"))
     if cfg.qk_norm:
         q = rms_head_norm(q, p["q_scale"])
         k = rms_head_norm(k, p["k_scale"])
@@ -310,20 +307,29 @@ def attention_forward(
         return _mla_forward(cfg, p, x, positions, mode=mode, cache=cache)
     b, s, _ = x.shape
     q, k, v = _qkv(cfg, p, x, positions)
+    disp = dsp.active_dispatcher()
 
     if mode in ("train", "prefill"):
-        out = chunked_attention(q, k, v, causal=True, window=cfg.attn_window)
+        if disp is not None and cfg.attn_window is None:
+            # the fused-attention cell of the op-by-device matrix
+            out = dsp.flash_route(disp, q, k, v, causal=True)
+        else:
+            out = chunked_attention(q, k, v, causal=True,
+                                    window=cfg.attn_window)
         new_cache = None
         if mode == "prefill":
             new_cache = _write_prefill_cache(cfg, k, v, positions)
     else:  # decode: s == 1
         assert cache is not None
         cache = _append_cache(cfg, cache, {"k": k, "v": v}, positions)
-        out = _decode_attention(cfg, q, cache, positions)
+        if disp is not None:
+            out = dsp.decode_route(
+                disp, q[:, 0], cache["k"], cache["v"], cache["pos"],
+                positions[:, 0], window=cfg.attn_window)[:, None]
+        else:
+            out = _decode_attention(cfg, q, cache, positions)
         new_cache = cache
-    out = einsum32("bshk,hkd->bsd", out, p["wo"])
-    if "bo" in p:
-        out = out + p["bo"].astype(out.dtype)
+    out = dsp.linear(out, p["wo"], n_contract=2, bias=p.get("bo"))
     return out, new_cache
 
 
@@ -379,15 +385,13 @@ def _decode_attention(cfg, q, cache, positions):
 
 
 def _mla_qkv_latent(cfg, p, x, positions):
-    from repro.models.layers import rms_head_norm as _rms  # noqa: F401
-
     b, s, _ = x.shape
-    cq = dot(x, p["wq_a"])
+    cq = dsp.linear(x, p["wq_a"])
     cq = rms_head_norm(cq, p["q_norm"])
-    q = einsum32("bsl,lhk->bshk", cq, p["wq_b"])            # (B,S,H,nope+rope)
+    q = dsp.linear(cq, p["wq_b"])                           # (B,S,H,nope+rope)
     q_nope = q[..., : cfg.qk_nope_dim]
     q_rope = apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
-    ckv_full = dot(x, p["wkv_a"])                           # (B,S,lora+rope)
+    ckv_full = dsp.linear(x, p["wkv_a"])                    # (B,S,lora+rope)
     c_kv = rms_head_norm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"])
     k_rope = apply_rope(ckv_full[..., None, cfg.kv_lora_rank:],
                         positions, cfg.rope_theta)[..., 0, :]   # (B,S,rope)
@@ -402,7 +406,7 @@ def _mla_forward(cfg, p, x, positions, *, mode, cache):
 
     if mode in ("train", "prefill"):
         # expand k,v from the latent; standard attention over full heads
-        kv = einsum32("bsl,lhm->bshm", c_kv, p["wkv_b"])
+        kv = dsp.linear(c_kv, p["wkv_b"])
         k_nope = kv[..., : cfg.qk_nope_dim]
         v = kv[..., cfg.qk_nope_dim:]
         k = jnp.concatenate(
@@ -444,7 +448,7 @@ def _mla_forward(cfg, p, x, positions, *, mode, cache):
                          cache["c_kv"].astype(jnp.float32)).astype(x.dtype)
         out = einsum32("bhl,lhv->bhv", ctx, w_v)[:, None]   # (B,1,H,v)
         new_cache = cache
-    out = einsum32("bshv,hvd->bsd", out, p["wo"])
+    out = dsp.linear(out, p["wo"], n_contract=2)
     return out, new_cache
 
 
@@ -459,21 +463,17 @@ def cross_attention_forward(
     x: jnp.ndarray,               # decoder stream (B, S, D)
     enc_kv: tuple[jnp.ndarray, jnp.ndarray],   # precomputed (k, v) from encoder
 ) -> jnp.ndarray:
-    q = einsum32("bsd,dhk->bshk", x, p["wq"])
-    if "bq" in p:
-        q = q + p["bq"].astype(q.dtype)
+    q = dsp.linear(x, p["wq"], bias=p.get("bq"))
     k, v = enc_kv
-    out = chunked_attention(q, k, v, causal=False)
-    out = einsum32("bshk,hkd->bsd", out, p["wo"])
-    if "bo" in p:
-        out = out + p["bo"].astype(out.dtype)
-    return out
+    disp = dsp.active_dispatcher()
+    if disp is not None:
+        out = dsp.flash_route(disp, q, k, v, causal=False)
+    else:
+        out = chunked_attention(q, k, v, causal=False)
+    return dsp.linear(out, p["wo"], n_contract=2, bias=p.get("bo"))
 
 
 def encode_cross_kv(cfg: ModelConfig, p: Params, enc_out: jnp.ndarray):
-    k = einsum32("bsd,dhk->bshk", enc_out, p["wk"])
-    v = einsum32("bsd,dhk->bshk", enc_out, p["wv"])
-    if "bk" in p:
-        k = k + p["bk"].astype(k.dtype)
-        v = v + p["bv"].astype(v.dtype)
+    k = dsp.linear(enc_out, p["wk"], bias=p.get("bk"))
+    v = dsp.linear(enc_out, p["wv"], bias=p.get("bv"))
     return k, v

@@ -1,0 +1,329 @@
+"""DispatchedLinear: the model stack's route into `core.dispatch`.
+
+The paper's execution story (ch. 4/5/7) is op-by-device routing for the
+*whole graph*: every matmul an application runs is resolved against the
+target's capability surface, and compressed weights (palettized or sparse)
+are consumed in their packed form — dequantized at the multiplier input —
+rather than folded to dense on the host. This module is that route for our
+model stack:
+
+  * `DispatchedWeight` — a pytree node carrying a packed weight (palette
+    nibbles + codebook, or 1:2 sparse values + selector bits) together with
+    its static `WeightForm` tag. The tag rides in the pytree aux data, so it
+    survives jit tracing, `lax.scan` stacking/slicing over layers, expert
+    indexing, and checkpoint round trips (`checkpoint/` knows the node).
+  * `linear(x, w)` — the single matmul entry point the layers call. Every
+    projection, MLP matrix, MoE expert bank, and logits head resolves here:
+    with a dispatcher in scope the call is routed through
+    `core.dispatch.KernelDispatcher` (`anemm` for dense, `palette`/`sparse`
+    for packed forms) with oracle fallback when the configured HAL target
+    gates the kernel; with no dispatcher and a plain dense weight it lowers
+    to the exact `dot_general` the seed emitted (bit-stable default path).
+  * `flash_route` / `decode_route` — the attention matmuls, routed through
+    the `flash` and `decode_attention` registry rows the same way.
+
+Scope is managed with `use_dispatcher(d)`; `launch/serve.py`, the examples,
+and the parity harness (`tests/test_model_dispatch_parity.py`) activate it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dispatch import KernelDispatcher
+from repro.core.hal import WeightForm
+
+# ---------------------------------------------------------------------------
+# Weight-form-tagged packed weights
+# ---------------------------------------------------------------------------
+
+# WeightForm -> kernel-registry row that streams it
+FORM_KERNELS: dict[WeightForm, str] = {
+    WeightForm.INT4_PALETTE: "palette",
+    WeightForm.SPARSE: "sparse",
+}
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class DispatchedWeight:
+    """A packed weight + its static routing tag, as one pytree node.
+
+    `payload` holds the form-specific arrays (children); everything else is
+    aux data, so tree ops that stack or slice the payload (scan over layers,
+    per-expert indexing, vmap) keep the tag intact.
+
+    The payload is packed over the 2-D matmul view (K = prod of contracted
+    dims, N = prod of output dims); `contract_shape`/`out_shape` remember the
+    logical dense layout and `dtype_name` the dense dtype, so `dense()` can
+    reconstruct exactly what the kernel streams.
+    """
+
+    form: WeightForm
+    contract_shape: tuple[int, ...]
+    out_shape: tuple[int, ...]
+    dtype_name: str
+    payload: dict[str, Any]
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten_with_keys(self):
+        keys = tuple(sorted(self.payload))
+        children = [(jax.tree_util.DictKey(k), self.payload[k]) for k in keys]
+        aux = (self.form, self.contract_shape, self.out_shape,
+               self.dtype_name, keys)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        form, contract_shape, out_shape, dtype_name, keys = aux
+        return cls(form, contract_shape, out_shape, dtype_name,
+                   dict(zip(keys, children)))
+
+    # -- views --------------------------------------------------------------
+    @property
+    def kernel(self) -> str:
+        return FORM_KERNELS[self.form]
+
+    @property
+    def n_stack(self) -> int:
+        """Leading stack dims still carried by the payload (layer-scan /
+        expert dims); 0 once scan slicing has reached the 2-D matmul view."""
+        ref = self.payload["packed" if self.form == WeightForm.INT4_PALETTE
+                           else "values"]
+        return ref.ndim - 2
+
+    def index(self, i) -> "DispatchedWeight":
+        """Slice one leading stack dim (expert banks inside the MoE loop)."""
+        return jax.tree.map(lambda a: a[i], self)
+
+    def dense(self) -> jnp.ndarray:
+        """Decode the 2-D packed payload back to the logical dense weight —
+        the FOLD path the oracle and the parity reference multiply against."""
+        if self.n_stack:
+            raise ValueError("dense() wants the 2-D matmul view; "
+                             "slice stack dims first")
+        if self.form == WeightForm.INT4_PALETTE:
+            from repro.kernels.palette.palette_matmul import unpack_dense
+            w2 = unpack_dense(self.payload["packed"],
+                              self.payload["lut"].astype(jnp.float32))
+        else:
+            from repro.kernels.sparse.sparse_matmul import unpack_dense
+            w2 = unpack_dense(self.payload["values"],
+                              self.payload["selector"])
+        return w2.reshape(self.contract_shape + self.out_shape).astype(
+            jnp.dtype(self.dtype_name))
+
+
+def pack_linear_weight(w: np.ndarray, form: WeightForm, *,
+                       n_contract: int, n_out: int,
+                       palette_iters: int = 4) -> DispatchedWeight:
+    """Pack one logical weight (stack dims + contract dims + out dims) into
+    `form`. Stack dims (layer-scan, expert) are preserved as leading payload
+    dims: `lax.scan`/`index()` slice them back to the 2-D matmul view."""
+    from repro.kernels.palette.palette_matmul import pack_kn
+    from repro.kernels.sparse.sparse_matmul import pack_pair_sparse
+
+    w = np.asarray(w)
+    dtype_name = jnp.dtype(w.dtype).name
+    n_stack = w.ndim - n_contract - n_out
+    if n_stack < 0:
+        raise ValueError(f"weight rank {w.ndim} < contract {n_contract} + "
+                         f"out {n_out}")
+    contract_shape = w.shape[n_stack:n_stack + n_contract]
+    out_shape = w.shape[n_stack + n_contract:]
+    k = int(np.prod(contract_shape))
+    n = int(np.prod(out_shape))
+    lead = w.shape[:n_stack]
+    w2 = np.asarray(w, np.float32).reshape(lead + (k, n))
+
+    def pack2d(mat: np.ndarray) -> dict[str, np.ndarray]:
+        if form == WeightForm.INT4_PALETTE:
+            packed, lut = pack_kn(mat, iters=palette_iters)
+            return {"packed": packed, "lut": lut}
+        vals, sel = pack_pair_sparse(mat)
+        return {"values": vals, "selector": sel}
+
+    if not lead:
+        payload = {k_: jnp.asarray(v) for k_, v in pack2d(w2).items()}
+    else:
+        slices = [pack2d(w2[idx]) for idx in np.ndindex(*lead)]
+        payload = {
+            k_: jnp.asarray(
+                np.stack([s[k_] for s in slices]).reshape(
+                    lead + slices[0][k_].shape))
+            for k_ in slices[0]
+        }
+    return DispatchedWeight(form, contract_shape, out_shape, dtype_name,
+                            payload)
+
+
+def packable(form: WeightForm, k: int) -> bool:
+    """Can a matmul view with contraction extent `k` pack into `form`?"""
+    if form == WeightForm.INT4_PALETTE:
+        return k % 2 == 0
+    if form == WeightForm.SPARSE:
+        return k % 16 == 0
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher scope
+# ---------------------------------------------------------------------------
+
+_SCOPE: list[KernelDispatcher] = []
+_DEFAULT: KernelDispatcher | None = None
+
+
+@contextlib.contextmanager
+def use_dispatcher(dispatcher: KernelDispatcher | None) -> Iterator[None]:
+    """Route every `linear`/attention matmul traced inside through
+    `dispatcher`. `None` is a no-op scope (keeps call sites unconditional)."""
+    if dispatcher is None:
+        yield
+        return
+    _SCOPE.append(dispatcher)
+    try:
+        yield
+    finally:
+        _SCOPE.pop()
+
+
+def active_dispatcher() -> KernelDispatcher | None:
+    return _SCOPE[-1] if _SCOPE else None
+
+
+def _dispatcher_for(w: Any) -> KernelDispatcher | None:
+    """The dispatcher a call must use: the scoped one, or — for a packed
+    weight that *cannot* run undispatched — a default TPU-target one."""
+    d = active_dispatcher()
+    if d is None and isinstance(w, DispatchedWeight):
+        global _DEFAULT
+        if _DEFAULT is None:
+            _DEFAULT = KernelDispatcher()
+        return _DEFAULT
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Routed execution
+# ---------------------------------------------------------------------------
+
+
+def route_and_run(disp: KernelDispatcher, name: str, dtype,
+                  native: Callable[[], Any], oracle: Callable[[], Any]):
+    """One op-by-device cell: resolve through the dispatcher's capability
+    gates, record the route, run the winning backend. Unlike
+    `KernelDispatcher.__call__` the two legs are callables, so call sites
+    can pass extra kwargs (window, causal) or differentiable wrappers."""
+    route = disp.resolve(name, dtype)
+    disp.routes.append(route)
+    return native() if route.native else oracle()
+
+
+def _matmul_dense(disp: KernelDispatcher, a2: jnp.ndarray,
+                  w2: jnp.ndarray) -> jnp.ndarray:
+    from repro.kernels.anemm import ops as anemm_ops
+    from repro.kernels.anemm.ref import anemm_ref
+
+    return route_and_run(
+        disp, "anemm", a2.dtype,
+        lambda: anemm_ops.matmul(a2, w2.astype(a2.dtype)),
+        lambda: anemm_ref(a2, w2.astype(a2.dtype)))
+
+
+def _matmul_packed(disp: KernelDispatcher, a2: jnp.ndarray,
+                   w: DispatchedWeight) -> jnp.ndarray:
+    # "a" first: KernelDispatcher resolves the route off the bundle's first
+    # floating leaf (the activation dtype).
+    if w.form == WeightForm.INT4_PALETTE:
+        bundle = {"a": a2, "packed": w.payload["packed"],
+                  "lut": w.payload["lut"]}
+    elif w.form == WeightForm.SPARSE:
+        bundle = {"a": a2, "values": w.payload["values"],
+                  "selector": w.payload["selector"]}
+    else:
+        raise ValueError(f"no streaming kernel for {w.form}")
+    return disp(w.kernel, bundle)
+
+
+def linear(x: jnp.ndarray, w: Any, *, n_contract: int = 1,
+           bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """The matmul every layer calls: contract the trailing `n_contract` dims
+    of `x` with the leading dims of `w`.
+
+    * packed weight -> `palette`/`sparse` kernel through the dispatcher
+      (oracle fallback when the HAL gates the form/op/dtype);
+    * dense weight + dispatcher in scope -> the `anemm` row, same gates;
+    * dense weight, no dispatcher -> the seed's exact wide-accumulator
+      `dot_general` (train-time default; numerically unchanged).
+    """
+    disp = _dispatcher_for(w)
+    if isinstance(w, DispatchedWeight):
+        if w.n_stack:
+            raise ValueError("packed weight still carries stack dims "
+                             f"{w.n_stack}; slice before linear()")
+        k = int(np.prod(x.shape[x.ndim - n_contract:]))
+        out2 = _matmul_packed(disp, x.reshape(-1, k), w)
+        out = out2.reshape(x.shape[:x.ndim - n_contract] + w.out_shape)
+    elif disp is not None:
+        k = int(np.prod(x.shape[x.ndim - n_contract:]))
+        out2 = _matmul_dense(disp, x.reshape(-1, k), w.reshape(k, -1))
+        out = out2.reshape(x.shape[:x.ndim - n_contract] + w.shape[n_contract:])
+    else:
+        dims = ((tuple(range(x.ndim - n_contract, x.ndim)),
+                 tuple(range(n_contract))), ((), ()))
+        out = jax.lax.dot_general(
+            x, w, dims, preferred_element_type=jnp.float32).astype(x.dtype)
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Attention routes (flash prefill/train, one-token decode)
+# ---------------------------------------------------------------------------
+
+
+def flash_route(disp: KernelDispatcher, q: jnp.ndarray, k: jnp.ndarray,
+                v: jnp.ndarray, *, causal: bool = True) -> jnp.ndarray:
+    """Fused-attention cell for (B, S, H, dh)-layout q/k/v. Native = the
+    Pallas flash kernel (recompute backward, so the train path
+    differentiates); gated = the chunked online-softmax reference."""
+    def native():
+        from repro.kernels.flash import ops as flash_ops
+        out = flash_ops.attention(q.transpose(0, 2, 1, 3),
+                                  k.transpose(0, 2, 1, 3),
+                                  v.transpose(0, 2, 1, 3), causal, None)
+        return out.transpose(0, 2, 1, 3)
+
+    def oracle():
+        from repro.models.attention import chunked_attention
+        return chunked_attention(q, k, v, causal=causal)
+
+    return route_and_run(disp, "flash", q.dtype, native, oracle)
+
+
+def decode_route(disp: KernelDispatcher, q: jnp.ndarray,
+                 k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                 positions: jnp.ndarray, current: jnp.ndarray, *,
+                 window: int | None = None) -> jnp.ndarray:
+    """One-token decode cell: q (B, H, dh) against a (B, S, KV, dh) cache.
+    Gated on `gather` (H13/M1 has none), so the op-by-device matrix sends
+    this to the oracle on early ANE targets — the paper's cell, live."""
+    def native():
+        from repro.kernels.flash.decode_attention import decode_attention
+        return decode_attention(q, k_cache, v_cache, positions, current,
+                                window=window)
+
+    def oracle():
+        from repro.kernels.flash.decode_attention import decode_attention_ref
+        return decode_attention_ref(q, k_cache, v_cache, positions, current,
+                                    window=window)
+
+    return route_and_run(disp, "decode_attention", q.dtype, native, oracle)

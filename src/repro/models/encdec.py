@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn_lib
+from repro.models import dispatched as dsp
 from repro.models.layers import (Params, apply_mlp, apply_norm, init_mlp,
                                  init_norm, sinusoidal_positions)
 from repro.parallel.ctx import ParallelContext
@@ -56,18 +57,16 @@ def encode(cfg: ModelConfig, p: Params, frames: jnp.ndarray,
 
     def body(carry, unit):
         h = apply_norm(cfg, unit["ln1"], carry)
-        q = h
-        out = attn_lib.chunked_attention(
-            attn_lib.einsum32("bsd,dhk->bshk", q, unit["attn"]["wq"])
-            + (unit["attn"].get("bq", 0.0)),
-            attn_lib.einsum32("bsd,dhk->bshk", h, unit["attn"]["wk"])
-            + (unit["attn"].get("bk", 0.0)),
-            attn_lib.einsum32("bsd,dhk->bshk", h, unit["attn"]["wv"])
-            + (unit["attn"].get("bv", 0.0)),
-            causal=False)
-        out = attn_lib.einsum32("bshk,hkd->bsd", out, unit["attn"]["wo"])
-        if "bo" in unit["attn"]:
-            out = out + unit["attn"]["bo"].astype(out.dtype)
+        q = dsp.linear(h, unit["attn"]["wq"], bias=unit["attn"].get("bq"))
+        k = dsp.linear(h, unit["attn"]["wk"], bias=unit["attn"].get("bk"))
+        v = dsp.linear(h, unit["attn"]["wv"], bias=unit["attn"].get("bv"))
+        disp = dsp.active_dispatcher()
+        if disp is not None:
+            out = dsp.flash_route(disp, q, k, v, causal=False)
+        else:
+            out = attn_lib.chunked_attention(q, k, v, causal=False)
+        out = dsp.linear(out, unit["attn"]["wo"], n_contract=2,
+                         bias=unit["attn"].get("bo"))
         x = carry + out
         h = apply_norm(cfg, unit["ln2"], x)
         return x + apply_mlp(cfg, unit["mlp"], h), None

@@ -19,18 +19,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import dispatched as dsp
 
 Params = dict[str, Any]
 
 
 def dot(x: jnp.ndarray, w: jnp.ndarray, dims=None) -> jnp.ndarray:
-    """Matmul with a wide (fp32) accumulator, output in x.dtype."""
+    """Matmul with a wide (fp32) accumulator, output in x.dtype.
+
+    The `dims=None` form is one routed linear (dense `anemm` row, or the
+    packed `palette`/`sparse` row for a tagged weight); explicit `dims`
+    callers (SSM/RG-LRU internals) keep the raw dot_general."""
     if dims is None:
-        out = jax.lax.dot_general(
-            x, w, (((x.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-    else:
-        out = jax.lax.dot_general(x, w, dims, preferred_element_type=jnp.float32)
+        return dsp.linear(x, w)
+    out = jax.lax.dot_general(x, w, dims, preferred_element_type=jnp.float32)
     return out.astype(x.dtype)
 
 
@@ -119,18 +121,13 @@ def init_mlp(key, cfg: ModelConfig, d: int, f: int, dtype) -> Params:
 
 def apply_mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
     if "wi" in p:                                       # plain MLP
-        h = dot(x, p["wi"])
-        if "bi" in p:
-            h = h + p["bi"].astype(h.dtype)
+        h = dsp.linear(x, p["wi"], bias=p.get("bi"))
         h = jax.nn.gelu(h)
-        out = dot(h, p["wo"])
-        if "bo" in p:
-            out = out + p["bo"].astype(out.dtype)
-        return out
+        return dsp.linear(h, p["wo"], bias=p.get("bo"))
     act = _ACTS.get(cfg.act, jax.nn.silu)
-    g = act(dot(x, p["wg"]))
-    u = dot(x, p["wu"])
-    return dot(g * u, p["wd"])
+    g = act(dsp.linear(x, p["wg"]))
+    u = dsp.linear(x, p["wu"])
+    return dsp.linear(g * u, p["wd"])
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +155,10 @@ def logits(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
         w = p["table"].T
     else:
         w = p["unembed"]
+    if isinstance(w, dsp.DispatchedWeight) or dsp.active_dispatcher() is not None:
+        # routed head: run the whole matmul in fp32 so the anchor holds even
+        # when the kernel stores in the activation dtype
+        return dsp.linear(x.astype(jnp.float32), w)
     out = jax.lax.dot_general(
         x, w.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)

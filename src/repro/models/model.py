@@ -15,6 +15,7 @@ multi-pod dry-run lowers against (no allocation).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Any
@@ -24,7 +25,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.dispatch import KernelDispatcher
 from repro.kernels import compat
+from repro.models import dispatched as dsp
 from repro.models import encdec as encdec_lib
 from repro.models import transformer as tf_lib
 from repro.models.layers import (Params, apply_norm, embed_tokens, init_embed,
@@ -39,11 +42,21 @@ _DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
 class Model:
     cfg: ModelConfig
     ctx: ParallelContext
+    # Op-by-device routing: when set, every matmul traced by loss/prefill/
+    # decode_step resolves through this dispatcher against the kernel
+    # registry (packed weights stream; gated kernels fall back to oracles).
+    # None = the seed's plain dense path.
+    dispatcher: KernelDispatcher | None = None
 
     # ------------------------------------------------------------------
     @property
     def dtype(self):
         return _DTYPES[self.cfg.dtype]
+
+    def _dispatch_scope(self):
+        if self.dispatcher is None:
+            return contextlib.nullcontext()
+        return dsp.use_dispatcher(self.dispatcher)
 
     def init(self, key) -> Params:
         cfg = self.cfg
@@ -106,13 +119,15 @@ class Model:
     def forward(self, params, tokens, positions, *, mode, caches=None,
                 frames=None):
         cfg = self.cfg
-        x = embed_tokens(params["embed"], tokens).astype(self.dtype)
-        if cfg.family == "encdec" and mode == "decode":
-            # cross cache already built at prefill; frames unused in decode
-            frames = None
-        x, new_caches, aux = self._backbone(params, x, positions, mode=mode,
-                                            caches=caches, frames=frames)
-        h = apply_norm(cfg, params["final_ln"], x)
+        with self._dispatch_scope():
+            x = embed_tokens(params["embed"], tokens).astype(self.dtype)
+            if cfg.family == "encdec" and mode == "decode":
+                # cross cache already built at prefill; frames unused in decode
+                frames = None
+            x, new_caches, aux = self._backbone(params, x, positions,
+                                                mode=mode, caches=caches,
+                                                frames=frames)
+            h = apply_norm(cfg, params["final_ln"], x)
         return h, new_caches, aux
 
     # ------------------------------------------------------------------
@@ -128,15 +143,17 @@ class Model:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         h, _, aux = self.forward(params, tokens, positions, mode="train",
                                  frames=batch.get("frames"))
-        lg = logits_fn(cfg, params["embed"], h)        # fp32 (B,S,V)
-        ce, z = _xent(lg, targets, cfg.vocab)
-        loss = ce + 1e-4 * z + 1e-2 * aux
-        metrics = {"ce": ce, "zloss": z, "moe_aux": aux,
-                   "tokens": jnp.asarray(b * s, jnp.float32)}
-        if cfg.mtp_depth and "mtp" in params:
-            mtp_loss = self._mtp_loss(params, tokens, targets, h, positions)
-            loss = loss + 0.3 * mtp_loss
-            metrics["mtp"] = mtp_loss
+        with self._dispatch_scope():
+            lg = logits_fn(cfg, params["embed"], h)    # fp32 (B,S,V)
+            ce, z = _xent(lg, targets, cfg.vocab)
+            loss = ce + 1e-4 * z + 1e-2 * aux
+            metrics = {"ce": ce, "zloss": z, "moe_aux": aux,
+                       "tokens": jnp.asarray(b * s, jnp.float32)}
+            if cfg.mtp_depth and "mtp" in params:
+                mtp_loss = self._mtp_loss(params, tokens, targets, h,
+                                          positions)
+                loss = loss + 0.3 * mtp_loss
+                metrics["mtp"] = mtp_loss
         metrics["loss"] = loss
         return loss, metrics
 
@@ -155,10 +172,7 @@ class Model:
             cfg, p["ln_e"],
             embed_tokens(params["embed"], next_tok).astype(h.dtype))
         merged = jnp.concatenate([h_in, e_next], axis=-1)
-        x = jax.lax.dot_general(merged, p["proj"],
-                                (((2,), (0,)), ((), ())),
-                                preferred_element_type=jnp.float32
-                                ).astype(h.dtype)
+        x = dsp.linear(merged, p["proj"])
         sig = tf_lib.layer_signature(cfg, cfg.n_layers - 1)
         x, _, _ = tf_lib.apply_layer(cfg, sig, p["layer"], x, positions,
                                      self.ctx, mode="train", cache=None)
@@ -195,7 +209,8 @@ class Model:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         h, caches, _ = self.forward(params, tokens, positions, mode="prefill",
                                     frames=batch.get("frames"))
-        lg = logits_fn(self.cfg, params["embed"], h[:, -1:])
+        with self._dispatch_scope():
+            lg = logits_fn(self.cfg, params["embed"], h[:, -1:])
         return caches, lg
 
     def decode_step(self, params, caches, token, pos):
@@ -203,7 +218,8 @@ class Model:
         positions = pos[:, None]
         h, caches, _ = self.forward(params, token, positions, mode="decode",
                                     caches=caches)
-        lg = logits_fn(self.cfg, params["embed"], h)
+        with self._dispatch_scope():
+            lg = logits_fn(self.cfg, params["embed"], h)
         return caches, lg
 
     # ------------------------------------------------------------------
@@ -261,5 +277,6 @@ def _xent(lg: jnp.ndarray, targets: jnp.ndarray, vocab: int, mask=None):
     return ce, z
 
 
-def build_model(cfg: ModelConfig, ctx: ParallelContext = CPU_CTX) -> Model:
-    return Model(cfg=cfg, ctx=ctx)
+def build_model(cfg: ModelConfig, ctx: ParallelContext = CPU_CTX,
+                dispatcher: KernelDispatcher | None = None) -> Model:
+    return Model(cfg=cfg, ctx=ctx, dispatcher=dispatcher)

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import compat
+from repro.models import dispatched as dsp
 from repro.models.layers import Params, apply_mlp, init_mlp
 from repro.parallel.ctx import ParallelContext
 
@@ -67,7 +68,22 @@ def _route(cfg: ModelConfig, router_w: jnp.ndarray, x: jnp.ndarray):
 
 
 def _expert_ffn(cfg: ModelConfig, wg, wu, wd, x):
-    """x: (E, C, d) through stacked expert banks -> (E, C, d)."""
+    """x: (E, C, d) through stacked expert banks -> (E, C, d).
+
+    With a dispatcher in scope (or packed expert banks) each expert's three
+    matmuls route through the kernel registry one bank at a time — the
+    expert dim is a stack dim of the weight-form tag, sliced per expert.
+    Otherwise: one batched einsum over the stacked banks (the seed path)."""
+    if dsp.active_dispatcher() is not None or isinstance(wg, dsp.DispatchedWeight):
+        act = jax.nn.silu if cfg.act != "gelu" else jax.nn.gelu
+        slice_ = (lambda w, e: w.index(e)
+                  if isinstance(w, dsp.DispatchedWeight) else w[e])
+        outs = []
+        for e in range(x.shape[0]):
+            g = act(dsp.linear(x[e], slice_(wg, e)))
+            u = dsp.linear(x[e], slice_(wu, e))
+            outs.append(dsp.linear((g * u).astype(x.dtype), slice_(wd, e)))
+        return jnp.stack(outs)
     act = jax.nn.silu if cfg.act != "gelu" else jax.nn.gelu
     g = jnp.einsum("ecd,edf->ecf", x, wg, preferred_element_type=jnp.float32)
     u = jnp.einsum("ecd,edf->ecf", x, wu, preferred_element_type=jnp.float32)
@@ -247,7 +263,10 @@ def moe_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
     msize = ctx.axis_size("model")
     tokens = x.shape[0] * x.shape[1]
     batch_ok = x.shape[0] % _batch_shards(ctx) == 0
-    if (ctx.active and ctx.use_ep and msize > 1 and batch_ok
+    # packed expert banks go through the dispatcher (dense path); the EP
+    # shard_map moves raw arrays and would have to re-fold them
+    plain_banks = not isinstance(p["wg"], dsp.DispatchedWeight)
+    if (ctx.active and ctx.use_ep and msize > 1 and batch_ok and plain_banks
             and cfg.n_experts % msize == 0
             and tokens % (_batch_shards(ctx) * msize) == 0):
         return moe_ep(cfg, p, x, ctx)

@@ -1,4 +1,13 @@
-"""Gradient compression for the DP all-reduce: int8 with error feedback.
+"""Compression for the two streams that cross a bandwidth boundary.
+
+1. **Model-weight compression for serving** (paper ch. 7): tag matmul
+   weights in the param pytree with a `WeightForm` and pack them
+   (`compress_model_params`) so the dispatcher streams them through the
+   `palette`/`sparse` kernel rows instead of folding to dense on the host.
+   The tag rides in `models.dispatched.DispatchedWeight` aux data and is
+   preserved by `checkpoint/`.
+
+2. **Gradient compression for the DP all-reduce**: int8 with error feedback.
 
 The paper's weight-compression result — bandwidth, not storage, is what
 compression buys on the direct route (ch. 7) — applied to the *gradient*
@@ -6,6 +15,10 @@ stream of data-parallel training: quantize each gradient leaf to int8 with a
 per-block fp32 scale before it crosses the interconnect, carry the
 quantization residual forward (error feedback, Seide et al. / 1-bit SGD
 lineage), and dequantize after the reduce.
+
+Both halves share the same roofline argument: the bytes that matter are the
+ones that move, and the reconstruction point sits on the far side of the
+boundary (multiplier input for weights, reducer input for gradients).
 
 Under `jit`+GSPMD the all-reduce is implicit; this module exposes the
 quantize/dequantize pair and a `compressed_psum` for explicit shard_map
@@ -17,10 +30,116 @@ buffer — exactly the stream-vs-fold trade of paper ch. 7.
 
 from __future__ import annotations
 
+from typing import Callable
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hal import WeightForm
+from repro.kernels import compat
+from repro.models import dispatched as dsp
 
 _BLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# Model-weight compression: per-parameter WeightForm tagging + packing
+# ---------------------------------------------------------------------------
+
+# Param-leaf names that are matmul weights, with their matmul view:
+# (n_contract, n_out) — leading dims beyond that are stack dims (layer scan,
+# expert bank). Attention-context names need their module prefix to
+# disambiguate (an MLP "wo" contracts one dim, an attention "wo" two).
+_ATTN_CONTEXT = ("mix", "attn", "self_attn", "cross_attn")
+_MLP_CONTEXT = ("mlp", "moe", "shared", "mtp")
+
+
+def matmul_view(path: str):
+    """(n_contract, n_out) of the leaf at `path`, or None if it is not an
+    eligible matmul weight. MLA's `wq_b`/`wkv_b` stay dense: the absorbed
+    decode slices the expanded bank, which a packed form cannot do."""
+    parts = path.split("/")
+    name = parts[-1]
+    in_attn = any(c in parts for c in _ATTN_CONTEXT)
+    if in_attn and name in ("wq", "wk", "wv"):
+        return (1, 2)
+    if in_attn and name == "wo":
+        return (2, 1)
+    if in_attn and name in ("wq_a", "wkv_a"):
+        return (1, 1)
+    if name in ("wi", "wg", "wu", "wd", "wo") and \
+            any(c in parts for c in _MLP_CONTEXT):
+        return (1, 1)
+    if name == "unembed" or (name == "proj" and "mtp" in parts):
+        return (1, 1)
+    return None
+
+
+def compress_model_params(params, form: WeightForm | str, *,
+                          predicate: Callable[[str], bool] | None = None,
+                          palette_iters: int = 4):
+    """Tag-and-pack every eligible matmul weight of a param pytree.
+
+    Walks the tree by path, replaces each eligible dense leaf with a
+    `DispatchedWeight` carrying the `WeightForm` tag and the packed payload
+    (stack dims — layer scan, expert banks — preserved as leading payload
+    dims). Leaves whose contraction extent cannot pack into `form`
+    (palette wants K even, sparse K % 16 == 0) stay dense and keep routing
+    through the `anemm` row. `predicate(path)` further restricts the set.
+    """
+    form = WeightForm(form) if isinstance(form, str) else form
+    if form not in dsp.FORM_KERNELS:
+        raise ValueError(f"{form} has no streaming kernel; "
+                         f"have {sorted(f.value for f in dsp.FORM_KERNELS)}")
+
+    def one(path, leaf):
+        path_str = compat.tree_path_str(path)
+        view = matmul_view(path_str)
+        if view is None or (predicate is not None and not predicate(path_str)):
+            return leaf
+        n_contract, n_out = view
+        if leaf.ndim < n_contract + n_out:
+            return leaf
+        n_stack = leaf.ndim - n_contract - n_out
+        k = int(np.prod(leaf.shape[n_stack:n_stack + n_contract]))
+        if not dsp.packable(form, k):
+            return leaf
+        return dsp.pack_linear_weight(np.asarray(leaf), form,
+                                      n_contract=n_contract, n_out=n_out,
+                                      palette_iters=palette_iters)
+
+    return compat.tree_map_with_path(one, params)
+
+
+def decompress_model_params(params):
+    """The FOLD path: decode every packed weight back to a dense array with
+    its logical shape/dtype — what the parity harness multiplies against
+    (same quantized values, dense bytes)."""
+    def one(leaf):
+        if not isinstance(leaf, dsp.DispatchedWeight):
+            return leaf
+        lead = jax.tree.leaves(leaf.payload)[0].shape[:leaf.n_stack]
+        if not lead:
+            return leaf.dense()
+        flat = [jax.tree.map(lambda a, idx=idx: a[idx], leaf).dense()
+                for idx in np.ndindex(*lead)]
+        stacked = jnp.stack(flat)
+        return stacked.reshape(lead + stacked.shape[1:])
+    return jax.tree.map(
+        one, params,
+        is_leaf=lambda x: isinstance(x, dsp.DispatchedWeight))
+
+
+def weight_form_census(params) -> dict[str, str]:
+    """path -> form tag for every packed leaf (debug/report surface)."""
+    out: dict[str, str] = {}
+    leaves, _ = compat.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, dsp.DispatchedWeight))
+    for path, leaf in leaves:
+        if isinstance(leaf, dsp.DispatchedWeight):
+            out[compat.tree_path_str(path)] = leaf.form.value
+    return out
 
 
 def _pad_len(n: int) -> int:

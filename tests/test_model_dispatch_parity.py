@@ -1,0 +1,223 @@
+"""Model-stack dispatch parity: dense reference vs the routed serving path.
+
+The harness the tentpole ships behind: for every registered weight form
+(dense / int4_palette / sparse) and several model configs, the model stack
+routed through `core.dispatch.KernelDispatcher` — every projection, MLP,
+MoE expert, attention and logits matmul resolved against the kernel
+registry — must match the dense reference within the registry's per-dtype
+tolerances, across all three serving-relevant entry points:
+
+    prefill   (batched prompt -> caches + last logits)
+    decode    (token-by-token against the resident KV cache)
+    loss      (the train-step forward; checks the routed stack end to end)
+
+For packed forms the reference is the *fold* path: the same quantized
+values decoded to dense and multiplied with plain XLA matmuls — so the
+comparison isolates the routing/kernels, not the quantizer.
+
+A second battery pins the oracle-fallback behavior: a capability-limited
+HAL (palette stream gated off; an M1 with no `gather`) must silently
+reroute the affected kernels to their oracles and still match.
+"""
+
+import dataclasses
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import hal
+from repro.core.dispatch import KernelDispatcher
+from repro.kernels import registry
+from repro.launch.serve import _merge_prefill
+from repro.models.model import build_model
+from repro.optim.compression import (compress_model_params,
+                                     decompress_model_params,
+                                     weight_form_census)
+
+FORMS = ("dense", "int4_palette", "sparse")
+FAST_ARCHS = ("tinyllama-1.1b",)
+# large-config sweeps: MoE (dbrx), biased GQA (granite), MLA+MoE+MTP
+# (deepseek), encoder-decoder (whisper)
+SLOW_ARCHS = ("dbrx-132b", "granite-8b", "deepseek-v3-671b", "whisper-small")
+DECODE_STEPS = 3
+
+
+def _tolerance(form: str) -> tuple[float, float]:
+    """The registry's fp32 tolerance for the kernel that streams `form`,
+    widened by a small depth factor (the smoke stacks chain a few routed
+    matmuls per layer)."""
+    kernel = {"dense": "anemm", "int4_palette": "palette",
+              "sparse": "sparse"}[form]
+    rtol, atol = registry.get(kernel).tol(jnp.float32)
+    return 4 * rtol, 4 * atol
+
+
+def _batch_for(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(b, s)), jnp.int32)}
+    batch["targets"] = jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(b, s)), jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_len, cfg.d_model)), jnp.float32)
+    return batch
+
+
+_CASE_CACHE: dict = {}
+
+
+def _run_case(arch: str, form: str, target: hal.Target = hal.TPU_V5E):
+    """Run prefill / decode / loss through the dense reference and the
+    dispatched path once per (arch, form, target); memoized."""
+    key = (arch, form, target.name)
+    if key in _CASE_CACHE:
+        return _CASE_CACHE[key]
+    cfg = configs.get_smoke(arch)
+    ref = build_model(cfg)
+    params = ref.init(jax.random.PRNGKey(0))
+    if form == "dense":
+        cparams, rparams = params, params
+    else:
+        cparams = compress_model_params(params, form)
+        assert weight_form_census(cparams), f"{arch}: nothing packed"
+        rparams = decompress_model_params(cparams)
+    dispatcher = KernelDispatcher(target)
+    routed = build_model(cfg, dispatcher=dispatcher)
+
+    batch = _batch_for(cfg)
+    b, s = batch["tokens"].shape
+    out = {"dispatcher": dispatcher, "cfg": cfg}
+
+    # prefill
+    caches_r, lg_r = jax.jit(ref.prefill)(rparams, batch)
+    caches_d, lg_d = jax.jit(routed.prefill)(cparams, batch)
+    out["prefill"] = (np.asarray(lg_r), np.asarray(lg_d))
+
+    # decode: identical greedy token stream (from the reference) into both
+    max_len = s + DECODE_STEPS + 1
+    caches_r = _merge_prefill(ref, ref.init_cache(b, max_len), caches_r, s)
+    caches_d = _merge_prefill(routed, routed.init_cache(b, max_len),
+                              caches_d, s)
+    decode_r = jax.jit(ref.decode_step)
+    decode_d = jax.jit(routed.decode_step)
+    tok = jnp.argmax(lg_r[:, -1, : cfg.vocab], axis=-1).astype(jnp.int32)[:, None]
+    steps = []
+    for i in range(DECODE_STEPS):
+        pos = jnp.full((b,), s + i, jnp.int32)
+        caches_r, dlg_r = decode_r(rparams, caches_r, tok, pos)
+        caches_d, dlg_d = decode_d(cparams, caches_d, tok, pos)
+        steps.append((np.asarray(dlg_r), np.asarray(dlg_d)))
+        tok = jnp.argmax(dlg_r[:, -1, : cfg.vocab], axis=-1
+                         ).astype(jnp.int32)[:, None]
+    out["decode"] = steps
+
+    # loss (train-step forward; fp32 anchor at the head)
+    loss_r, _ = jax.jit(ref.loss)(rparams, batch)
+    loss_d, _ = jax.jit(routed.loss)(cparams, batch)
+    out["loss"] = (float(loss_r), float(loss_d))
+
+    _CASE_CACHE[key] = out
+    return out
+
+
+def _sweep(archs):
+    return [pytest.param(arch, form, id=f"{arch}-{form}")
+            for arch in archs for form in FORMS]
+
+
+class _ParitySweep:
+    ARCHS: tuple = ()
+
+    def test_prefill_parity(self, arch, form):
+        case = _run_case(arch, form)
+        rtol, atol = _tolerance(form)
+        lg_r, lg_d = case["prefill"]
+        np.testing.assert_allclose(lg_d, lg_r, rtol=rtol, atol=atol)
+
+    def test_decode_parity(self, arch, form):
+        case = _run_case(arch, form)
+        rtol, atol = _tolerance(form)
+        for i, (dlg_r, dlg_d) in enumerate(case["decode"]):
+            np.testing.assert_allclose(
+                dlg_d, dlg_r, rtol=rtol, atol=atol,
+                err_msg=f"decode step {i} diverged")
+
+    def test_loss_parity(self, arch, form):
+        case = _run_case(arch, form)
+        rtol, _ = _tolerance(form)
+        loss_r, loss_d = case["loss"]
+        assert loss_d == pytest.approx(loss_r, rel=rtol)
+
+    def test_routes_are_native_on_tpu(self, arch, form):
+        # on the full-capability TPU target nothing may fall back: the
+        # sweep must exercise the Pallas rows, not silently oracle them
+        case = _run_case(arch, form)
+        backends = {r.backend for r in case["dispatcher"].routes}
+        assert backends == {"pallas"}, Counter(
+            (r.kernel, r.reason) for r in case["dispatcher"].routes
+            if r.backend == "oracle")
+        if form != "dense":
+            kernels = {r.kernel for r in case["dispatcher"].routes}
+            expected = {"int4_palette": "palette", "sparse": "sparse"}[form]
+            assert expected in kernels, kernels
+
+
+@pytest.mark.parametrize("arch,form", _sweep(FAST_ARCHS))
+class TestParityFast(_ParitySweep):
+    """Fast lane: one representative arch x every weight form."""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,form", _sweep(SLOW_ARCHS))
+class TestParityFull(_ParitySweep):
+    """Full lane: MoE / biased / MLA+MTP / encdec configs x every form."""
+
+
+# ---------------------------------------------------------------------------
+# Oracle fallback under capability-limited HALs
+# ---------------------------------------------------------------------------
+
+
+def _limited_v5e_no_palette() -> hal.Target:
+    return dataclasses.replace(
+        hal.TPU_V5E, name="tpu-v5e-nopalette",
+        weight_streams={**hal.TPU_V5E.weight_streams,
+                        hal.WeightForm.INT4_PALETTE: False})
+
+
+class TestOracleFallback:
+    def test_palette_falls_back_when_stream_gated(self):
+        """A HAL whose palette stream folds must route the packed-weight
+        matmuls to the oracle — and still match the dense reference."""
+        case = _run_case("tinyllama-1.1b", "int4_palette",
+                         target=_limited_v5e_no_palette())
+        rtol, atol = _tolerance("int4_palette")
+        lg_r, lg_d = case["prefill"]
+        np.testing.assert_allclose(lg_d, lg_r, rtol=rtol, atol=atol)
+        for dlg_r, dlg_d in case["decode"]:
+            np.testing.assert_allclose(dlg_d, dlg_r, rtol=rtol, atol=atol)
+        palette_routes = [r for r in case["dispatcher"].routes
+                          if r.kernel == "palette"]
+        assert palette_routes
+        assert all(r.backend == "oracle" for r in palette_routes)
+        assert all("folds" in r.reason for r in palette_routes)
+
+    def test_decode_attention_oracles_on_gatherless_m1(self):
+        """H13/M1 has no native gather: decode attention must take the
+        oracle cell of the op-by-device matrix while anemm/flash stay
+        native — and decode still matches the dense reference."""
+        case = _run_case("tinyllama-1.1b", "dense", target=hal.ANE_M1)
+        rtol, atol = _tolerance("dense")
+        for dlg_r, dlg_d in case["decode"]:
+            np.testing.assert_allclose(dlg_d, dlg_r, rtol=rtol, atol=atol)
+        by_kernel = {}
+        for r in case["dispatcher"].routes:
+            by_kernel.setdefault(r.kernel, set()).add(r.backend)
+        assert by_kernel["decode_attention"] == {"oracle"}
+        assert by_kernel["anemm"] == {"pallas"}
+        assert by_kernel["flash"] == {"pallas"}
