@@ -120,7 +120,11 @@ class ProgramCache:
 class DispatchRecord:
     key: str
     wall_s: float
-    work_s: float          # wall minus the measured floor estimate
+    work_s: float          # wall minus the costmodel floor estimate, >= 0
+    floor_s: float = 0.0   # the per-dispatch floor charged against this call
+    queue_depth: int = 0   # ops already encoded ahead of this one at encode time
+    batch: int = 1         # samples this dispatch carried (amortization denom)
+    seq: int = 0           # submission index on this stream (total order)
 
 
 class ExecutionStream:
@@ -129,30 +133,62 @@ class ExecutionStream:
     The engine keeps one command in flight (submissions serialize, §2.4);
     a jit stream behaves the same way per device. `execute_sync` measures the
     per-call wall time so the dispatch-floor benchmark can isolate t0 exactly
-    the way the paper's slope method does."""
+    the way the paper's slope method does. Each record carries the costmodel
+    floor estimate of its target (`Target.dispatch_floor_s`), so
+    `work_s = max(0, wall - floor)` splits every dispatch into fixed overhead
+    and useful work — the split the batching scheduler amortizes (§9.4).
+    """
 
-    def __init__(self, cache: ProgramCache | None = None) -> None:
+    def __init__(self, cache: ProgramCache | None = None, *,
+                 target: hal.Target | None = None,
+                 floor_s: float | None = None) -> None:
         self.cache = cache or ProgramCache()
+        self.target = target or hal.TPU_V5E
+        self.floor_s = self.target.dispatch_floor_s if floor_s is None \
+            else floor_s
         self.records: list[DispatchRecord] = []
-        self._encoded: list[tuple[Any, tuple, dict, str]] = []
+        self._encoded: list[tuple[Any, tuple, dict, str, int, int]] = []
+        self._seq = 0
+
+    @property
+    def queue_depth(self) -> int:
+        """Ops encoded but not yet executed."""
+        return len(self._encoded)
 
     def encode_operation(self, compiled, args: tuple, key: str = "",
-                         kwargs: dict | None = None) -> None:
-        self._encoded.append((compiled, args, kwargs or {}, key))
+                         kwargs: dict | None = None, *,
+                         batch: int = 1) -> None:
+        """Queue one compiled program. `batch` is the number of samples the
+        dispatch carries — the denominator of per-sample floor amortization."""
+        self._encoded.append((compiled, args, kwargs or {}, key, batch,
+                              len(self._encoded)))
 
-    def execute_sync(self):
+    def execute_sync(self) -> list:
         """Run everything encoded, in order, blocking (the sound default the
-        paper recommends; overlapping streams is the unfinished path)."""
+        paper recommends; overlapping streams is the unfinished path).
+        Always returns a list of outputs, one per encoded op, in encode
+        order — including for a single op."""
         outs = []
-        for compiled, args, kwargs, key in self._encoded:
+        for compiled, args, kwargs, key, batch, depth in self._encoded:
             t0 = time.perf_counter()
             out = compiled(*args, **kwargs)
             out = jax.block_until_ready(out)
             wall = time.perf_counter() - t0
-            self.records.append(DispatchRecord(key, wall, 0.0))
+            self.records.append(DispatchRecord(
+                key, wall, max(0.0, wall - self.floor_s), self.floor_s,
+                depth, batch, self._seq))
+            self._seq += 1
             outs.append(out)
         self._encoded.clear()
-        return outs if len(outs) != 1 else outs[0]
+        return outs
+
+    # -- floor accounting over the record log -------------------------------
+    def total_floor_s(self) -> float:
+        """Fixed dispatch cost accumulated so far (#dispatches x floor)."""
+        return sum(r.floor_s for r in self.records)
+
+    def total_work_s(self) -> float:
+        return sum(r.work_s for r in self.records)
 
     def reset(self) -> None:
         self._encoded.clear()

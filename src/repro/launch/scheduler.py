@@ -1,0 +1,552 @@
+"""Continuous-batching request scheduler on `ExecutionStream` (paper §9.4).
+
+The paper's dispatch-floor measurements put a fixed ~t0 on every command the
+engine executes; batching to 512 samples drops the per-sample share ~127x
+(§9.4). Serving lives or dies on amortizing exactly that floor across queued
+requests, so this module schedules a *request queue* onto the decode program
+rather than serving fixed-shape rounds:
+
+  * **request queue** — FIFO of `Request`s (own prompt, own generation
+    budget, own arrival step), admitted in arrival order.
+  * **prompt-length bucketing** — heterogeneous prompts compile against a
+    bounded set of prefill shapes: a prompt prefills at the largest bucket
+    <= its length and catches the remainder up through the (single-shape)
+    decode program, so the content-hash `ProgramCache` sees at most
+    `len(buckets)` prefill programs + 1 decode program, no matter how many
+    distinct prompt lengths arrive.
+  * **slot-masked decode** — `n_slots` decode lanes step together with
+    per-slot absolute positions; idle lanes carry a masked dummy token.
+    Admission writes a new request's prefill state into a free lane
+    mid-flight (`_admit_into_slot`), while the other lanes keep decoding.
+  * **encode-many / execute-once** — every model dispatch goes through
+    `ExecutionStream.encode_operation` + one `execute_sync` per scheduler
+    tick, and every `DispatchRecord` carries the costmodel floor estimate,
+    so per-request dispatch overhead is measured, not modeled.
+
+Scheduling policies
+-------------------
+Two ship here; both subclass `_SchedulerBase` and share admission/cache
+machinery:
+
+  * `SequentialSchedule` — the parity reference: one request at a time,
+    full-length prefill + a private decode loop. One dispatch per token per
+    request: the un-amortized floor.
+  * `ContinuousSchedule` — the tentpole: slot-masked batched decode with
+    mid-flight admission.
+
+Adding a policy: subclass `_SchedulerBase`, implement
+`run(requests) -> list[RequestResult]` from the shared helpers
+(`_prefill_program`, `_decode_program`, `_admit_into_slot`, `_reset_slot`,
+`self.sampler`), and register it in `SCHEDULES`;
+`launch/serve.py --schedule <name>` then drives it. Keep every model dispatch on `self.stream` so the floor accounting and
+the `BENCH_serve.json` curve stay truthful.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hal
+from repro.core.dispatch import ExecutionStream, ProgramCache
+from repro.kernels import compat
+
+# Cache leaves with a KV time axis, merged by name: the single axis on which
+# a prefill cache may be shorter than the decode buffer. Everything else
+# (recurrent SSM/RG-LRU state, conv tails) must match exactly or fail loud.
+TIME_MERGE_LEAVES = frozenset({"k", "v", "pos", "c_kv", "k_rope"})
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: a prompt and a generation budget."""
+
+    rid: int
+    prompt: np.ndarray            # (L,) int32 token ids, L >= 1
+    max_new_tokens: int
+    arrival: int = 0              # scheduler step at which the request exists
+    frames: np.ndarray | None = None   # encdec only: (enc_len, d_model)
+
+    def __post_init__(self) -> None:
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray            # (max_new_tokens,) generated ids
+    bucket: int                   # prefill bucket used (0 = decode-only)
+    admitted_step: int
+    finished_step: int
+
+
+def default_buckets(max_prompt_len: int) -> tuple[int, ...]:
+    """Powers of two up to the longest prompt: ceil(log2) buckets total, so
+    the prefill shape set stays logarithmic in prompt length."""
+    out = []
+    b = 8
+    while b <= max_prompt_len:
+        out.append(b)
+        b *= 2
+    return tuple(out) or (max(1, max_prompt_len),)
+
+
+def bucket_for(prompt_len: int, buckets: Iterable[int]) -> int:
+    """Largest bucket <= prompt_len (the prefilled prefix); 0 when every
+    bucket is longer — the request then catches up entirely through decode."""
+    fits = [b for b in buckets if b <= prompt_len]
+    return max(fits) if fits else 0
+
+
+# ---------------------------------------------------------------------------
+# Prefill-cache -> decode-buffer merges
+# ---------------------------------------------------------------------------
+
+
+def _leaf_name(path: Any) -> str:
+    return compat.tree_path_str(path).rsplit("/", 1)[-1]
+
+
+def merge_prefill_caches(dec_caches: Any, pf_caches: Any) -> Any:
+    """Copy prefill cache contents into the (longer time axis) decode
+    buffers, whole-batch. Merging is by *named time axis*: a leaf may differ
+    from its decode buffer on exactly one axis, and only when the leaf is a
+    KV-time leaf (`TIME_MERGE_LEAVES`); the prefilled prefix lands at time
+    offset 0, which is the ring-buffer slot for positions 0..s-1. Any rank
+    mismatch, off-axis mismatch, or unnamed-axis mismatch raises with the
+    tree path — prefill state (e.g. SSM conv/recurrent state) must never be
+    silently dropped."""
+    def merge(path, dst, src):
+        loc = compat.tree_path_str(path)
+        if dst.ndim != src.ndim:
+            raise ValueError(
+                f"cache leaf {loc!r}: prefill rank {src.ndim} {src.shape} != "
+                f"decode buffer rank {dst.ndim} {dst.shape}; prefill state "
+                f"would be dropped")
+        diff = [i for i in range(dst.ndim) if dst.shape[i] != src.shape[i]]
+        if not diff:
+            return src.astype(dst.dtype)
+        name = _leaf_name(path)
+        if (len(diff) == 1 and name in TIME_MERGE_LEAVES
+                and src.shape[diff[0]] <= dst.shape[diff[0]]):
+            return jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), (0,) * dst.ndim)
+        raise ValueError(
+            f"cache leaf {loc!r}: cannot merge prefill {src.shape} into "
+            f"decode buffer {dst.shape} (mismatched axes {diff}; only the "
+            f"named time axis of {sorted(TIME_MERGE_LEAVES)} may differ)")
+    return compat.tree_map_with_path(merge, dec_caches, pf_caches)
+
+
+def _admit_leaf(path, dst, src, slot):
+    """Write batch-1 prefill leaf `src` into decode lane `slot` of `dst`.
+
+    Cache trees are stacked (stack/layer axis 0, batch axis 1); `src` has
+    batch extent 1 and may be shorter than `dst` on its named time axis.
+    `pos` lanes are re-initialized to -1 first so stale KV entries from the
+    lane's previous occupant can never pass the validity mask."""
+    loc = compat.tree_path_str(path)
+    if dst.ndim != src.ndim:
+        raise ValueError(
+            f"cache leaf {loc!r}: prefill rank {src.ndim} != decode buffer "
+            f"rank {dst.ndim}")
+    if src.shape[1] != 1:
+        raise ValueError(f"cache leaf {loc!r}: admission wants a batch-1 "
+                         f"prefill cache, got batch {src.shape[1]}")
+    diff = [i for i in range(dst.ndim)
+            if i != 1 and dst.shape[i] != src.shape[i]]
+    name = _leaf_name(path)
+    row = src[:, 0].astype(dst.dtype)             # (stack, ...)
+    if not diff:                                  # full-lane overwrite
+        return dst.at[:, slot].set(row)
+    if (len(diff) == 1 and name in TIME_MERGE_LEAVES
+            and src.shape[diff[0]] <= dst.shape[diff[0]]):
+        base = dst[:, slot]
+        if name == "pos":                          # invalidate the stale tail
+            base = jnp.full_like(base, -1)
+        new_row = jax.lax.dynamic_update_slice(base, row, (0,) * base.ndim)
+        return dst.at[:, slot].set(new_row)
+    raise ValueError(
+        f"cache leaf {loc!r}: cannot admit prefill {src.shape} into decode "
+        f"buffer {dst.shape} (mismatched axes {diff})")
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _admit_into_slot(dec_caches, pf_caches, slot):
+    """One on-stream dispatch per admission: merge a batch-1 prefill cache
+    into lane `slot` (resident buffers donated). Compiled once per prefill
+    bucket shape via jit's own cache — deliberately outside the ProgramCache
+    so the bucketing compile bound stays `#buckets x {prefill, decode}` —
+    but executed through the ExecutionStream so the floor ledger charges
+    it."""
+    return compat.tree_map_with_path(
+        lambda p, d, s: _admit_leaf(p, d, s, slot), dec_caches, pf_caches)
+
+
+# one fused dispatch for the sequential reference's whole-batch merge
+_merge_prefill_jit = jax.jit(merge_prefill_caches, donate_argnums=(0,))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _reset_slot(dec_caches, slot):
+    """Clear lane `slot` for a decode-only admission (no prefill prefix):
+    `pos` lanes to -1 (nothing valid), recurrent/conv state to zeros (the
+    init_cache state), KV payload left as-is (masked by pos)."""
+    def reset(path, dst):
+        name = _leaf_name(path)
+        if name == "pos":
+            return dst.at[:, slot].set(jnp.full_like(dst[:, slot], -1))
+        if name in TIME_MERGE_LEAVES:
+            return dst
+        return dst.at[:, slot].set(jnp.zeros_like(dst[:, slot]))
+    return compat.tree_map_with_path(reset, dec_caches)
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+SAMPLING_MODES = ("greedy", "categorical")
+
+
+class TokenSampler:
+    """Per-request deterministic sampling: the key for the token placed at
+    absolute position p of request r is fold_in(fold_in(seed, r), p), so a
+    request's stream is identical under any schedule or batch composition."""
+
+    def __init__(self, mode: str, vocab: int, seed: int) -> None:
+        if mode not in SAMPLING_MODES:
+            raise ValueError(f"sampling mode {mode!r} not in {SAMPLING_MODES}")
+        self.mode = mode
+        self.vocab = vocab
+        self._root = jax.random.PRNGKey(seed)
+        self._draw = jax.jit(
+            lambda key, lg: jax.random.categorical(key, lg))
+
+    def __call__(self, logits_row: np.ndarray, rid: int, position: int) -> int:
+        lg = np.asarray(logits_row, np.float32)[: self.vocab]
+        if self.mode == "greedy":
+            return int(np.argmax(lg))
+        key = jax.random.fold_in(jax.random.fold_in(self._root, rid), position)
+        return int(self._draw(key, jnp.asarray(lg)))
+
+
+# ---------------------------------------------------------------------------
+# Schedulers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One decode lane's host-side state machine."""
+
+    req: Request | None = None
+    next_pos: int = 0             # absolute position the next decode writes
+    next_tok: int = 0             # token consumed by the next decode step
+    generated: list[int] = dataclasses.field(default_factory=list)
+    bucket: int = 0
+    admitted_step: int = 0
+
+    @property
+    def active(self) -> bool:
+        return self.req is not None
+
+    @property
+    def generating(self) -> bool:
+        """Past the prompt: the next decode step's logits are sampled."""
+        return self.active and self.next_pos >= self.req.prompt.size
+
+
+class _SchedulerBase:
+    """Shared machinery: bucketed prefill programs, admission, floor stats."""
+
+    def __init__(self, model, params, cfg, *, max_len: int,
+                 buckets: tuple[int, ...] | None = None,
+                 sampling: str = "greedy", seed: int = 0,
+                 program_cache: ProgramCache | None = None,
+                 stream: ExecutionStream | None = None,
+                 target: hal.Target | None = None) -> None:
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.buckets = tuple(sorted(buckets)) if buckets else \
+            default_buckets(max_len)
+        self.stream = stream or ExecutionStream(program_cache, target=target)
+        self.cache = program_cache or self.stream.cache
+        self.sampler = TokenSampler(sampling, cfg.vocab, seed)
+        # decode-program handle per (token, pos) shape: the per-token hot
+        # path must not re-flatten the whole (params, caches) pytree for a
+        # ProgramCache key on every step (the warm start is free here)
+        self._decode_memo: dict = {}
+
+    # -- programs -----------------------------------------------------------
+    def _prefill_batch(self, tokens: np.ndarray,
+                       frames: np.ndarray | None) -> dict:
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if self.cfg.family == "encdec":
+            if frames is None:
+                raise ValueError("encdec serving needs per-request frames")
+            batch["frames"] = jnp.asarray(frames[None],
+                                          self.model.dtype)
+        return batch
+
+    def _prefill_program(self, batch: dict):
+        compiled, key = self.cache.compile(self.model.prefill, self.params,
+                                           batch)
+        return compiled, key
+
+    def _decode_program(self, caches, tok, pos):
+        """Compile-or-hit the decode program. Cache shapes are fixed per
+        scheduler (n_slots x max_len), so the handle is memoized by the
+        (token, pos) shapes after the first ProgramCache resolution."""
+        sig = (tok.shape, str(tok.dtype), pos.shape, str(pos.dtype))
+        hit = self._decode_memo.get(sig)
+        if hit is not None:
+            return hit
+        compiled, key = self.cache.compile(
+            self.model.decode_step, self.params, caches, tok, pos,
+            jit_kwargs={"donate_argnums": (1,)})
+        self._decode_memo[sig] = (compiled, key)
+        return compiled, key
+
+    def _check(self, req: Request) -> None:
+        need = req.prompt.size + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt.size} + gen "
+                f"{req.max_new_tokens} exceeds max_len {self.max_len}")
+        if self.cfg.family == "encdec" and bucket_for(
+                req.prompt.size, self.buckets) == 0:
+            raise ValueError(
+                f"request {req.rid}: encdec prompts must reach a prefill "
+                f"bucket (cross-attention cache is built at prefill); "
+                f"buckets={self.buckets}")
+
+    # -- floor accounting ---------------------------------------------------
+    def stats(self, n_requests: int) -> dict:
+        recs = self.stream.records
+        n = max(n_requests, 1)
+        return {
+            "n_dispatches": len(recs),
+            "floor_s": self.stream.total_floor_s(),
+            "work_s": self.stream.total_work_s(),
+            "dispatch_wall_s": sum(r.wall_s for r in recs),
+            "per_request_dispatch_overhead_s": self.stream.total_floor_s() / n,
+            "per_request_dispatches": len(recs) / n,
+        }
+
+
+class SequentialSchedule(_SchedulerBase):
+    """The parity reference: requests served one at a time, full-length
+    prefill + a private batch-1 decode loop. Every token pays its own
+    dispatch floor — the §9.4 worst case the continuous schedule amortizes.
+    This is the seed serve loop's semantics, kept bit-compatible."""
+
+    name = "sequential"
+
+    def run(self, requests: list[Request]) -> list[RequestResult]:
+        results = []
+        for step, req in enumerate(sorted(requests, key=lambda r:
+                                          (r.arrival, r.rid))):
+            self._check(req)
+            L = req.prompt.size
+            batch = self._prefill_batch(req.prompt[None], req.frames)
+            prefill, pkey = self._prefill_program(batch)
+            self.stream.encode_operation(prefill, (self.params, batch),
+                                         pkey, batch=1)
+            pf_caches, logits = self.stream.execute_sync()[0]
+
+            caches = self.model.init_cache(1, self.max_len)
+            self.stream.encode_operation(_merge_prefill_jit,
+                                         (caches, pf_caches),
+                                         "merge_prefill", batch=1)
+            caches = self.stream.execute_sync()[0]
+            tok = self.sampler(np.asarray(logits)[0, -1], req.rid, L)
+            generated = [tok]
+            for i in range(req.max_new_tokens - 1):
+                pos = L + i
+                tokj = jnp.asarray([[tok]], jnp.int32)
+                posj = jnp.full((1,), pos, jnp.int32)
+                decode, dkey = self._decode_program(caches, tokj, posj)
+                self.stream.encode_operation(
+                    decode, (self.params, caches, tokj, posj), dkey, batch=1)
+                caches, logits = self.stream.execute_sync()[0]
+                tok = self.sampler(np.asarray(logits)[0, -1], req.rid, pos + 1)
+                generated.append(tok)
+            results.append(RequestResult(
+                req.rid, L, np.asarray(generated, np.int32),
+                bucket=L, admitted_step=step, finished_step=step))
+        return results
+
+
+class ContinuousSchedule(_SchedulerBase):
+    """Continuous batching: `n_slots` decode lanes in one resident cache,
+    stepping together. New requests are admitted into free lanes mid-flight:
+    prefill at the largest bucket <= the prompt, catch the tail up through
+    the shared decode program (teacher-forced prompt tokens), then generate.
+    All lanes share each decode dispatch, so the per-request floor share is
+    floor / n_active."""
+
+    name = "continuous"
+
+    def __init__(self, model, params, cfg, *, n_slots: int, max_len: int,
+                 **kw) -> None:
+        super().__init__(model, params, cfg, max_len=max_len, **kw)
+        if n_slots < 1:
+            raise ValueError(f"continuous schedule needs n_slots >= 1, "
+                             f"got {n_slots}")
+        self.n_slots = n_slots
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.caches = None        # allocated lazily on first run
+
+    # -- admission ----------------------------------------------------------
+    def _admit(self, slot_idx: int, req: Request, step: int) -> None:
+        """Prefill the bucket prefix through the stream, then write the
+        prefill state into the lane. Called after `_check`."""
+        slot = self.slots[slot_idx]
+        L = req.prompt.size
+        bucket = bucket_for(L, self.buckets)
+        sidx = jnp.asarray(slot_idx, jnp.int32)
+        # lane writes dispatch on the stream too: the floor ledger must
+        # charge every real dispatch, admissions included
+        if bucket == 0:
+            self.stream.encode_operation(_reset_slot, (self.caches, sidx),
+                                         "reset_slot", batch=1)
+            self.caches = self.stream.execute_sync()[0]
+            slot.next_pos, slot.next_tok = 0, int(req.prompt[0])
+        else:
+            batch = self._prefill_batch(req.prompt[None, :bucket], req.frames)
+            prefill, pkey = self._prefill_program(batch)
+            self.stream.encode_operation(prefill, (self.params, batch),
+                                         pkey, batch=1)
+            pf_caches, logits = self.stream.execute_sync()[0]
+            self.stream.encode_operation(
+                _admit_into_slot, (self.caches, pf_caches, sidx),
+                "admit_slot", batch=1)
+            self.caches = self.stream.execute_sync()[0]
+            slot.next_pos = bucket
+            if bucket < L:        # catch up through decode, teacher-forced
+                slot.next_tok = int(req.prompt[bucket])
+            else:                 # prompt fully prefilled: sample token L
+                tok = self.sampler(np.asarray(logits)[0, -1], req.rid, L)
+                slot.generated.append(tok)
+                slot.next_tok = tok
+        slot.req = req
+        slot.bucket = bucket
+        slot.admitted_step = step
+
+    def _advance(self, slot: _Slot, logits_row: np.ndarray,
+                 results: list[RequestResult], step: int) -> None:
+        """Consume one decode step's logits for an active lane."""
+        req = slot.req
+        pos_written = slot.next_pos
+        slot.next_pos = pos_written + 1
+        nxt = pos_written + 1
+        if nxt < req.prompt.size:            # still catching up: teacher-force
+            slot.next_tok = int(req.prompt[nxt])
+            return
+        tok = self.sampler(logits_row, req.rid, nxt)
+        slot.generated.append(tok)
+        slot.next_tok = tok
+        if len(slot.generated) >= req.max_new_tokens:
+            results.append(RequestResult(
+                req.rid, req.prompt.size,
+                np.asarray(slot.generated[:req.max_new_tokens], np.int32),
+                bucket=slot.bucket, admitted_step=slot.admitted_step,
+                finished_step=step))
+            slot.req = None
+            slot.generated = []
+
+    # -- the serve loop -----------------------------------------------------
+    def run(self, requests: list[Request]) -> list[RequestResult]:
+        for r in requests:
+            self._check(r)
+        queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        if self.caches is None:
+            self.caches = self.model.init_cache(self.n_slots, self.max_len)
+        results: list[RequestResult] = []
+        step = 0
+        while queue or any(s.active for s in self.slots):
+            # admissions: free lanes x arrived requests, in arrival order
+            for i, slot in enumerate(self.slots):
+                if not queue or queue[0].arrival > step:
+                    break
+                if not slot.active:
+                    self._admit(i, queue.pop(0), step)
+            active = [s for s in self.slots if s.active
+                      and not (s.generating
+                               and len(s.generated) >= s.req.max_new_tokens)]
+            # a fully-prefilled request can finish without a decode step
+            for s in list(self.slots):
+                if s.active and s.generating \
+                        and len(s.generated) >= s.req.max_new_tokens:
+                    self._advance_finished(s, results, step)
+            if not active:
+                if queue:
+                    step += 1     # idle tick: wait for the next arrival
+                    continue
+                break
+            # one slot-masked decode dispatch for every lane
+            tok = np.zeros((self.n_slots, 1), np.int32)
+            pos = np.zeros((self.n_slots,), np.int32)
+            for i, s in enumerate(self.slots):
+                if s.active:
+                    tok[i, 0] = s.next_tok
+                    pos[i] = s.next_pos
+            tokj = jnp.asarray(tok)
+            posj = jnp.asarray(pos)
+            decode, dkey = self._decode_program(self.caches, tokj, posj)
+            self.stream.encode_operation(
+                decode, (self.params, self.caches, tokj, posj), dkey,
+                batch=len(active))
+            self.caches, logits = self.stream.execute_sync()[0]
+            lg = np.asarray(logits[:, -1, : self.cfg.vocab], np.float32)
+            for i, s in enumerate(self.slots):
+                if s.active:
+                    self._advance(s, lg[i], results, step)
+            step += 1
+        results.sort(key=lambda r: r.rid)
+        return results
+
+    def _advance_finished(self, slot: _Slot, results: list[RequestResult],
+                          step: int) -> None:
+        req = slot.req
+        results.append(RequestResult(
+            req.rid, req.prompt.size,
+            np.asarray(slot.generated[:req.max_new_tokens], np.int32),
+            bucket=slot.bucket, admitted_step=slot.admitted_step,
+            finished_step=step))
+        slot.req = None
+        slot.generated = []
+
+
+SCHEDULES = {
+    "sequential": SequentialSchedule,
+    "continuous": ContinuousSchedule,
+}
+
+
+def make_scheduler(schedule: str, model, params, cfg, *, n_slots: int,
+                   max_len: int, **kw) -> _SchedulerBase:
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule {schedule!r} not in {sorted(SCHEDULES)}")
+    if schedule == "continuous":
+        return ContinuousSchedule(model, params, cfg, n_slots=n_slots,
+                                  max_len=max_len, **kw)
+    return SequentialSchedule(model, params, cfg, max_len=max_len, **kw)

@@ -180,6 +180,14 @@ class TestDispatch:
         outs = stream.execute_sync()
         assert len(outs) == 2 and float(outs[1][0]) == 2.0
         assert len(stream.records) == 2
+        # type-stable: a single encoded op still comes back as a list, and
+        # each record charges the target's costmodel dispatch floor
+        stream.encode_operation(compiled, (jnp.zeros((4,)),), key)
+        outs = stream.execute_sync()
+        assert isinstance(outs, list) and len(outs) == 1
+        rec = stream.records[-1]
+        assert rec.floor_s == stream.floor_s > 0.0
+        assert rec.work_s == max(0.0, rec.wall_s - rec.floor_s)
 
     def test_resident_state_never_recrosses_host(self):
         # paper:§2.6 — output buffer aliases the next input buffer: the
