@@ -1,14 +1,18 @@
 """Batched serving example — the paper's serving shape end to end.
 
     PYTHONPATH=src python examples/serve_batched.py --arch mamba2-1.3b
+    PYTHONPATH=src python examples/serve_batched.py --schedule slo --slo-ms 5
 
 Compile once (content-hash program cache), route every matmul op-by-device
 through the kernel dispatcher (packed weights stream through the
 palette/sparse kernels), keep KV/SSM state resident (donated buffers), and
 schedule the request queue continuously over the decode lanes so every
 dispatch's fixed floor is shared by all active requests (paper §9.4).
-Works for any of the 10 architectures in reduced form on CPU; the same
-driver serves the full configs on a pod.
+`--schedule slo` additionally overlaps the decode stream (the host encodes
+step N+1 while step N executes, sampling fused on device — paper §2.4's
+open overlapping-streams path) and sheds admissions that would breach
+`--slo-ms`. Works for any of the 10 architectures in reduced form on CPU;
+the same driver serves the full configs on a pod.
 """
 
 import argparse
@@ -28,18 +32,27 @@ def main():
                     choices=serve.WEIGHT_FORMS)
     ap.add_argument("--sampling", default="greedy",
                     choices=("greedy", "categorical"))
+    ap.add_argument("--schedule", default="continuous",
+                    choices=("continuous", "slo"))
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="slo schedule: defer admissions while the "
+                         "predicted token latency exceeds this")
     args = ap.parse_args()
 
     print(f"serving {args.arch} (reduced config), batch={args.batch}, "
-          f"weights={args.weight_form}, two identical request rounds")
-    out = serve.run(["--arch", args.arch, "--smoke",
-                     "--batch", str(args.batch),
-                     "--prompt-len", str(args.prompt_len),
-                     "--gen", str(args.gen),
-                     "--weight-form", args.weight_form,
-                     "--sampling", args.sampling,
-                     "--schedule", "continuous",
-                     "--requests", "2"])
+          f"weights={args.weight_form}, schedule={args.schedule}, "
+          f"two identical request rounds")
+    argv = ["--arch", args.arch, "--smoke",
+            "--batch", str(args.batch),
+            "--prompt-len", str(args.prompt_len),
+            "--gen", str(args.gen),
+            "--weight-form", args.weight_form,
+            "--sampling", args.sampling,
+            "--schedule", args.schedule,
+            "--requests", "2"]
+    if args.schedule == "slo" and args.slo_ms is not None:
+        argv += ["--slo-ms", str(args.slo_ms)]
+    out = serve.run(argv)
     # compile-once discipline: the second identical request round must
     # warm-start from the content-hash program cache — a zero hit rate means
     # some direct-matmul path bypassed the dispatcher/compile route.
@@ -50,6 +63,13 @@ def main():
           f"at {out['tok_per_s']:.1f} tok/s (CPU, reduced model); "
           f"program-cache hits={out['cache_hits']} "
           f"misses={out['cache_misses']}; routes={out.get('routes')}")
+    if args.schedule == "slo":
+        print(f"overlapped stream: in-flight window "
+              f"{out['max_in_flight']}, mean depth "
+              f"{out['mean_inflight_depth']:.2f}, "
+              f"{out['deferred_admissions']} admissions deferred by the "
+              f"SLO gate, predicted p99 token latency "
+              f"{out['predicted_token_latency_s']*1e3:.2f} ms")
     # batching amortization, the paper's §9.4 point: the same requests
     # served one at a time pay the full dispatch floor each
     single = serve.run(["--arch", args.arch, "--smoke", "--batch", "1",

@@ -14,6 +14,9 @@ The XLA mapping:
   * resident buffers       -> donated arguments (the output aliases the input
                               buffer, XLA's form of output->input port binding)
   * execution stream       -> ExecutionStream with dispatch-floor accounting
+  * overlapping streams    -> AsyncExecutionStream: encode -> submit -> sync
+                              with a bounded in-flight window (the firmware
+                              drains command buffers while the host encodes)
   * op-by-device routing   -> KernelDispatcher over the kernel registry:
                               capability-gated Pallas kernel, oracle fallback
 """
@@ -22,8 +25,11 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import queue as queue_mod
 import re
+import threading
 import time
+import weakref
 from collections import deque
 from typing import Any, Callable, Hashable
 
@@ -125,6 +131,10 @@ class DispatchRecord:
     queue_depth: int = 0   # ops already encoded ahead of this one at encode time
     batch: int = 1         # samples this dispatch carried (amortization denom)
     seq: int = 0           # submission index on this stream (total order)
+    submit_ts: float = 0.0     # perf_counter at submission (host hand-off)
+    complete_ts: float = 0.0   # perf_counter when the drain saw it complete
+    inflight_depth: int = 0    # ops submitted and not yet complete at submit
+                               # time: 0 on a sync stream, < window on async
 
 
 class ExecutionStream:
@@ -173,10 +183,11 @@ class ExecutionStream:
             t0 = time.perf_counter()
             out = compiled(*args, **kwargs)
             out = jax.block_until_ready(out)
-            wall = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            wall = t1 - t0
             self.records.append(DispatchRecord(
                 key, wall, max(0.0, wall - self.floor_s), self.floor_s,
-                depth, batch, self._seq))
+                depth, batch, self._seq, submit_ts=t0, complete_ts=t1))
             self._seq += 1
             outs.append(out)
         self._encoded.clear()
@@ -192,6 +203,188 @@ class ExecutionStream:
 
     def reset(self) -> None:
         self._encoded.clear()
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One submitted-but-unconfirmed dispatch: the record being timed, the
+    (possibly still executing) outputs, and the completion latch."""
+
+    record: DispatchRecord
+    out: Any
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    error: BaseException | None = None
+
+
+def _drain_loop(stream_ref, drain_q) -> None:
+    """Background drain: confirm in-flight dispatches in submission order via
+    `jax.block_until_ready`, stamp completion, and retire them to the record
+    log. Runs as a daemon thread holding only a weakref to the stream so a
+    dropped stream (plus its finalizer sentinel) shuts the thread down.
+
+    A leaf that was donated forward into the *next* submission raises
+    "deleted or donated buffer" on sync — completion of the consumer implies
+    completion of the producer, so those leaves are skipped and the
+    non-donated leaves (tokens, logits, scalars) carry the timestamp."""
+    while True:
+        h = drain_q.get()
+        if h is None:
+            return
+        try:
+            for leaf in jax.tree.leaves(h.out):
+                try:
+                    if hasattr(leaf, "block_until_ready"):
+                        leaf.block_until_ready()
+                except Exception as e:
+                    msg = str(e).lower()
+                    if "donated" not in msg and "deleted" not in msg:
+                        raise
+        except BaseException as e:  # surface on the next sync()
+            h.error = e
+        t = time.perf_counter()
+        stream = stream_ref()
+        if stream is None:
+            h.done.set()
+            return
+        r = h.record
+        r.complete_ts = t
+        r.wall_s = t - r.submit_ts
+        r.work_s = max(0.0, r.wall_s - r.floor_s)
+        with stream._lock:
+            stream.records.append(r)
+            if h.error is not None:
+                stream._errors.append(h.error)
+            try:                      # FIFO: h is the leftmost entry
+                stream._pending.remove(h)
+            except ValueError:        # pragma: no cover - defensive
+                pass
+        h.done.set()
+        del stream, h, r   # no strong refs held while parked on the queue
+
+
+class AsyncExecutionStream(ExecutionStream):
+    """Overlapped dispatch: encode -> submit -> sync with a bounded in-flight
+    window (paper §2.4's open overlapping-streams path).
+
+    The sound default (`ExecutionStream.execute_sync`) serializes: every
+    dispatch pays its floor with the host idle in between. This stream keeps
+    the host encoding while the device drains, the way the firmware drains
+    command buffers while the host keeps encoding:
+
+      * **double-buffered submission queues** — `encode_operation` fills the
+        encode queue; `submit` hands each op to the device without blocking
+        and moves it to the in-flight queue. With the default window of 2
+        the device executes one submission while the host encodes the next.
+      * **bounded in-flight window** — `submit` throttles when
+        `max_in_flight` submissions are unconfirmed, so run-ahead (and
+        resident-buffer lifetime) stays bounded.
+      * **background drain** — a daemon thread confirms completions in
+        submission order via `jax.block_until_ready`, stamping
+        `complete_ts` and retiring the `DispatchRecord`. Floor accounting
+        stays truthful: every dispatch still charges the costmodel floor
+        once, and `wall_s = complete_ts - submit_ts` now *includes* the
+        overlap (two overlapped dispatches show overlapping [submit,
+        complete] intervals instead of summed walls).
+
+    Outputs returned by `submit` are live JAX arrays (async futures): they
+    can be fed straight into the next encoded op to chain device work
+    without a host round-trip. `sync` is the barrier; `execute_sync`
+    degenerates to submit-then-sync so the base contract holds.
+    """
+
+    def __init__(self, cache: ProgramCache | None = None, *,
+                 target: hal.Target | None = None,
+                 floor_s: float | None = None,
+                 max_in_flight: int = 2) -> None:
+        super().__init__(cache, target=target, floor_s=floor_s)
+        if max_in_flight < 1:
+            raise ValueError(f"max_in_flight must be >= 1, got {max_in_flight}")
+        self.max_in_flight = max_in_flight
+        self._pending: deque[_Inflight] = deque()
+        self._errors: list[BaseException] = []
+        self._lock = threading.Lock()
+        self._drain_q: queue_mod.SimpleQueue = queue_mod.SimpleQueue()
+        self._drainer: threading.Thread | None = None
+
+    # -- window state -------------------------------------------------------
+    @property
+    def in_flight_depth(self) -> int:
+        """Submissions handed to the device and not yet confirmed complete."""
+        with self._lock:
+            return len(self._pending)
+
+    def _ensure_drainer(self) -> None:
+        if self._drainer is None or not self._drainer.is_alive():
+            self._drainer = threading.Thread(
+                target=_drain_loop, args=(weakref.ref(self), self._drain_q),
+                name="stream-drain", daemon=True)
+            # a dropped stream must not strand the drain thread
+            weakref.finalize(self, self._drain_q.put, None)
+            self._drainer.start()
+
+    def _throttle(self) -> None:
+        """Block until the in-flight window has a free slot."""
+        while True:
+            with self._lock:
+                if len(self._pending) < self.max_in_flight:
+                    return
+                oldest = self._pending[0]
+            oldest.done.wait()
+
+    # -- encode -> submit -> sync -------------------------------------------
+    def submit(self) -> list:
+        """Hand every encoded op to the device without waiting for results.
+        Returns the per-op outputs in encode order — live async values,
+        usable immediately as inputs of the next encoded op."""
+        self._ensure_drainer()
+        outs = []
+        for compiled, args, kwargs, key, batch, depth in self._encoded:
+            self._throttle()
+            with self._lock:
+                depth_now = len(self._pending)
+            t_sub = time.perf_counter()
+            out = compiled(*args, **kwargs)     # async dispatch: returns now
+            rec = DispatchRecord(
+                key, 0.0, 0.0, self.floor_s, depth, batch, self._seq,
+                submit_ts=t_sub, inflight_depth=depth_now)
+            self._seq += 1
+            h = _Inflight(rec, out)
+            with self._lock:
+                self._pending.append(h)
+            self._drain_q.put(h)
+            outs.append(out)
+        self._encoded.clear()
+        return outs
+
+    def sync(self) -> list:
+        """Barrier: wait until every in-flight submission is confirmed.
+        Returns the outputs of the ops that were still in flight, in
+        submission order; re-raises any execution error the drain saw."""
+        with self._lock:
+            handles = list(self._pending)
+        for h in handles:
+            h.done.wait()
+        with self._lock:
+            errors, self._errors = list(self._errors), []
+        if errors:
+            raise errors[0]
+        return [h.out for h in handles]
+
+    def execute_sync(self) -> list:
+        """The base contract: run everything encoded, in order, blocking.
+        Drains the in-flight window first so the record order stays total,
+        then runs inline — a barrier gains nothing from the drain thread,
+        and skipping it keeps per-dispatch admissions off the wakeup path."""
+        self.sync()
+        return super().execute_sync()
+
+    def close(self) -> None:
+        """Drain outstanding work and stop the background thread."""
+        self.sync()
+        if self._drainer is not None and self._drainer.is_alive():
+            self._drain_q.put(None)
+            self._drainer.join(timeout=5.0)
+            self._drainer = None
 
 
 def resident(fn: Callable, state_argnums: int | tuple[int, ...]):

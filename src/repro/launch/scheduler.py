@@ -25,14 +25,20 @@ rather than serving fixed-shape rounds:
 
 Scheduling policies
 -------------------
-Two ship here; both subclass `_SchedulerBase` and share admission/cache
+Three ship here; all subclass `_SchedulerBase` and share admission/cache
 machinery:
 
   * `SequentialSchedule` — the parity reference: one request at a time,
     full-length prefill + a private decode loop. One dispatch per token per
     request: the un-amortized floor.
-  * `ContinuousSchedule` — the tentpole: slot-masked batched decode with
-    mid-flight admission.
+  * `ContinuousSchedule` — slot-masked batched decode with mid-flight
+    admission, serialized through `execute_sync` (the sound default).
+  * `SLOSchedule` — overlapped decode on `AsyncExecutionStream` (the
+    paper's unfinished overlapping-streams path): the host encodes decode
+    step N+1 while step N executes, with sampling fused on-device so the
+    token chain never round-trips the host, plus SLO-aware admission that
+    defers a queued request while the costmodel-predicted token latency
+    would breach `--slo-ms`.
 
 Adding a policy: subclass `_SchedulerBase`, implement
 `run(requests) -> list[RequestResult]` from the shared helpers
@@ -45,6 +51,7 @@ the `BENCH_serve.json` curve stay truthful.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from functools import partial
 from typing import Any, Iterable
 
@@ -53,7 +60,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hal
-from repro.core.dispatch import ExecutionStream, ProgramCache
+from repro.core.dispatch import (AsyncExecutionStream, ExecutionStream,
+                                 ProgramCache)
 from repro.kernels import compat
 
 # Cache leaves with a KV time axis, merged by name: the single axis on which
@@ -536,9 +544,272 @@ class ContinuousSchedule(_SchedulerBase):
         slot.generated = []
 
 
+class SLOSchedule(ContinuousSchedule):
+    """Overlapped continuous batching with SLO-aware admission.
+
+    The decode loop is software-pipelined on `AsyncExecutionStream`: the
+    host plans a *window* of decode steps whose control flow is fully
+    deterministic (teacher-forcing vs sampling per lane follows positions,
+    never logits), fuses next-token selection into the decode program
+    (device argmax / per-(rid, pos) fold_in categorical — bit-identical to
+    the host `TokenSampler`), and submits each step with the previous
+    step's token output chained in as a live async value. The host never
+    blocks per token: step N+1 is encoded and submitted while step N
+    executes, and tokens materialize once per window at the sync barrier.
+    Windows end exactly where host decisions live — a lane completing, or a
+    queued arrival that could claim a free lane.
+
+    Admission is gated on the costmodel: a queued request is admitted into
+    a free lane only when the predicted token latency
+    `dispatch_floor_s x in-flight depth + per-token work` (work = p99 of
+    recent decode-step walls, the floor until observed) stays under the
+    SLO. An idle engine always admits — the gate sheds load, it cannot
+    starve. Deferred admissions are counted in `deferred_admissions`.
+
+    Token streams are schedule-invariant by construction (greedy ignores
+    the schedule; categorical is keyed per (request, position)), so this
+    policy is token-exact against `ContinuousSchedule` and
+    `SequentialSchedule` whatever the SLO defers.
+    """
+
+    name = "slo"
+
+    #: decode-wall samples retained for the p99 work predictor
+    WALL_WINDOW = 64
+
+    #: default in-flight window when this schedule builds its own stream: a
+    #: typical decode run-ahead, deep enough that submits inside one window
+    #: rarely throttle (each throttle costs a drain-thread wakeup on the
+    #: critical path); the stream's own default of 2 is plain double
+    #: buffering for callers that hand-roll submit/sync
+    MAX_IN_FLIGHT = 8
+
+    def __init__(self, model, params, cfg, *, n_slots: int, max_len: int,
+                 slo_ms: float | None = None, max_in_flight: int = MAX_IN_FLIGHT,
+                 stream: ExecutionStream | None = None,
+                 program_cache: ProgramCache | None = None,
+                 target: hal.Target | None = None, **kw) -> None:
+        if stream is None:
+            stream = AsyncExecutionStream(program_cache, target=target,
+                                          max_in_flight=max_in_flight)
+        if not isinstance(stream, AsyncExecutionStream):
+            raise ValueError(
+                "SLOSchedule pipelines decode through AsyncExecutionStream; "
+                f"got {type(stream).__name__} (a sync stream would serialize "
+                "the window and the floor accounting would not reflect "
+                "overlap)")
+        super().__init__(model, params, cfg, n_slots=n_slots, max_len=max_len,
+                         stream=stream, program_cache=program_cache,
+                         target=target, **kw)
+        self.slo_s = None if slo_ms is None else float(slo_ms) * 1e-3
+        self.deferred_admissions = 0
+        self._step_memo: dict = {}
+        self._decode_keys: set[str] = set()
+        self._decode_walls: deque[float] = deque(maxlen=self.WALL_WINDOW)
+        self._records_seen = 0
+
+    # -- fused decode + on-device sampling ----------------------------------
+    def _fused_step_program(self, caches, tok, pos, forced, do_sample, rids):
+        """Compile-or-hit the pipelined step: decode_step + next-token
+        selection in one program, so the token chain stays on device. The
+        sampling math mirrors `TokenSampler` exactly: fp32 logits sliced to
+        the vocab, first-index argmax for greedy, fold_in(fold_in(seed,
+        rid), pos) categorical otherwise."""
+        sig = (tok.shape, str(tok.dtype), pos.shape)
+        hit = self._step_memo.get(sig)
+        if hit is not None:
+            return hit
+        model, vocab = self.model, self.cfg.vocab
+        mode, root = self.sampler.mode, self.sampler._root
+
+        def fused(params, caches, tok, pos, forced, do_sample, rids):
+            caches, logits = model.decode_step(params, caches, tok, pos)
+            lg = logits[:, -1, :vocab].astype(jnp.float32)
+            if mode == "greedy":
+                samp = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            else:
+                def draw(rid, p, row):
+                    key = jax.random.fold_in(jax.random.fold_in(root, rid), p)
+                    return jax.random.categorical(key, row)
+                samp = jax.vmap(draw)(rids, pos + 1, lg).astype(jnp.int32)
+            nxt = jnp.where(do_sample, samp, forced).astype(jnp.int32)
+            return caches, nxt[:, None], samp
+
+        compiled, key = self.cache.compile(
+            fused, self.params, caches, tok, pos, forced, do_sample, rids,
+            jit_kwargs={"donate_argnums": (1,)})
+        self._decode_keys.add(key)
+        hit = (compiled, key)
+        self._step_memo[sig] = hit
+        return hit
+
+    # -- the SLO admission gate ---------------------------------------------
+    def _observe_decode_walls(self) -> None:
+        """Fold any new decode-step records into the work predictor."""
+        recs = self.stream.records
+        for r in recs[self._records_seen:]:
+            if r.key in self._decode_keys:
+                self._decode_walls.append(r.wall_s)
+        self._records_seen = len(recs)
+
+    def predicted_token_latency_s(self) -> float:
+        """Costmodel-predicted p99 token latency were one more request
+        admitted now: each decode tick pays the dispatch floor once per
+        submission that can sit in flight ahead of it (the window bound),
+        plus the per-token work — the p99 of recently observed decode-step
+        walls, or the floor itself before anything was observed."""
+        if self._decode_walls:
+            walls = sorted(self._decode_walls)
+            work = walls[min(len(walls) - 1, int(0.99 * len(walls)))]
+        else:
+            work = self.stream.floor_s
+        # the gate runs at drained barriers (live in-flight depth 0), so the
+        # p99 queue-delay term uses the window bound the next pipelined
+        # window will fill to, not the momentary depth
+        return self.stream.floor_s * self.stream.max_in_flight + work
+
+    def _admission_clear(self) -> bool:
+        if self.slo_s is None:
+            return True
+        if not any(s.active for s in self.slots) \
+                and self.stream.in_flight_depth == 0:
+            return True          # idle engine: deferring forever would
+                                 # starve without ever improving the SLO
+        return self.predicted_token_latency_s() <= self.slo_s
+
+    # -- the pipelined serve loop -------------------------------------------
+    def _window_horizon(self, step: int, queue: list[Request]) -> int:
+        """Decode steps encodable ahead without a host decision: up to the
+        first lane completion, never past the step at which a queued
+        arrival could claim a currently-free lane, and never deeper than
+        the stream's in-flight window — submitting past the window would
+        throttle every further step on a drain-thread wakeup, while
+        syncing at the window boundary drains once per window."""
+        remain = []
+        for s in self.slots:
+            if not s.active:
+                continue
+            # steps still teacher-forced before sampling starts at this lane
+            forced_left = max(0, s.req.prompt.size - 1 - s.next_pos)
+            to_sample = s.req.max_new_tokens - len(s.generated)
+            remain.append(forced_left + to_sample)
+        k = min(remain + [self.stream.max_in_flight])
+        if queue and any(not s.active for s in self.slots):
+            k = min(k, max(1, queue[0].arrival - step))
+        return k
+
+    def _pipelined_window(self, step: int, queue: list[Request],
+                          results: list[RequestResult]) -> int:
+        """Encode + submit `k` chained decode steps, then sync once and fold
+        the materialized tokens back into the host state machines."""
+        k = self._window_horizon(step, queue)
+        n = self.n_slots
+        tok0 = np.zeros((n, 1), np.int32)
+        rids = np.zeros((n,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.active:
+                tok0[i, 0] = s.next_tok
+                rids[i] = s.req.rid
+        tok_dev = jnp.asarray(tok0)       # becomes a chained async value
+        ridsj = jnp.asarray(rids)
+        plan: list[tuple[Any, list[int]]] = []
+        for _ in range(k):
+            pos = np.zeros((n,), np.int32)
+            forced = np.zeros((n,), np.int32)
+            mask = np.zeros((n,), bool)
+            sampled_lanes: list[int] = []
+            n_active = 0
+            for i, s in enumerate(self.slots):
+                if not s.active:
+                    continue
+                n_active += 1
+                pos[i] = s.next_pos
+                nxt = s.next_pos + 1
+                if nxt < s.req.prompt.size:   # catch-up: teacher-force
+                    forced[i] = int(s.req.prompt[nxt])
+                else:
+                    mask[i] = True
+                    sampled_lanes.append(i)
+                s.next_pos = nxt
+            posj = jnp.asarray(pos)
+            forcedj = jnp.asarray(forced)
+            maskj = jnp.asarray(mask)
+            compiled, dkey = self._fused_step_program(
+                self.caches, tok_dev, posj, forcedj, maskj, ridsj)
+            self.stream.encode_operation(
+                compiled, (self.params, self.caches, tok_dev, posj, forcedj,
+                           maskj, ridsj), dkey, batch=n_active)
+            # submit without blocking: caches/token chain forward as live
+            # async values; the background drain confirms completions
+            self.caches, tok_dev, samp = self.stream.submit()[0]
+            plan.append((samp, sampled_lanes))
+        self.stream.sync()
+        self._observe_decode_walls()
+        nxt_host = np.asarray(tok_dev)[:, 0]
+        for t, (samp, sampled_lanes) in enumerate(plan):
+            samp_np = np.asarray(samp) if sampled_lanes else None
+            for i in sampled_lanes:
+                s = self.slots[i]
+                s.generated.append(int(samp_np[i]))
+                if len(s.generated) >= s.req.max_new_tokens:
+                    self._advance_finished(s, results, step + t)
+        for i, s in enumerate(self.slots):
+            if s.active:
+                s.next_tok = int(nxt_host[i])
+        return step + k
+
+    def run(self, requests: list[Request]) -> list[RequestResult]:
+        for r in requests:
+            self._check(r)
+        queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        if self.caches is None:
+            self.caches = self.model.init_cache(self.n_slots, self.max_len)
+        results: list[RequestResult] = []
+        step = 0
+        while queue or any(s.active for s in self.slots):
+            # admissions happen at a drained barrier (prefill + lane writes
+            # are stream dispatches themselves); the gate reads the ledger
+            for i, slot in enumerate(self.slots):
+                if not queue or queue[0].arrival > step:
+                    break
+                if slot.active:
+                    continue
+                if not self._admission_clear():
+                    self.deferred_admissions += 1
+                    break
+                self._admit(i, queue.pop(0), step)
+            # a fully-prefilled request can finish without a decode step
+            for s in list(self.slots):
+                if s.active and s.generating \
+                        and len(s.generated) >= s.req.max_new_tokens:
+                    self._advance_finished(s, results, step)
+            if not any(s.active for s in self.slots):
+                if queue:
+                    step += 1     # idle tick: wait for the next arrival
+                    continue
+                break
+            step = self._pipelined_window(step, queue, results)
+        results.sort(key=lambda r: r.rid)
+        return results
+
+    # -- reporting ----------------------------------------------------------
+    def stats(self, n_requests: int) -> dict:
+        out = super().stats(n_requests)
+        recs = self.stream.records
+        out.update({
+            "deferred_admissions": self.deferred_admissions,
+            "max_in_flight": self.stream.max_in_flight,
+            "mean_inflight_depth": float(np.mean(
+                [r.inflight_depth for r in recs])) if recs else 0.0,
+            "predicted_token_latency_s": self.predicted_token_latency_s(),
+        })
+        return out
+
+
 SCHEDULES = {
     "sequential": SequentialSchedule,
     "continuous": ContinuousSchedule,
+    "slo": SLOSchedule,
 }
 
 
@@ -546,6 +817,11 @@ def make_scheduler(schedule: str, model, params, cfg, *, n_slots: int,
                    max_len: int, **kw) -> _SchedulerBase:
     if schedule not in SCHEDULES:
         raise ValueError(f"schedule {schedule!r} not in {sorted(SCHEDULES)}")
+    if schedule == "slo":
+        return SLOSchedule(model, params, cfg, n_slots=n_slots,
+                           max_len=max_len, **kw)
+    kw.pop("slo_ms", None)           # SLO knobs are slo-schedule-only
+    kw.pop("max_in_flight", None)
     if schedule == "continuous":
         return ContinuousSchedule(model, params, cfg, n_slots=n_slots,
                                   max_len=max_len, **kw)

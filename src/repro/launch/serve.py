@@ -27,6 +27,11 @@ The paper's serving shape (ch. 2/5/14), end to end:
     all active lanes (§9.4: batching to 512 drops per-sample cost ~127x),
     while `--schedule sequential` is the un-amortized one-request-at-a-time
     parity reference.
+  * **overlapped streams** — `--schedule slo` pipelines decode on an
+    `AsyncExecutionStream` (encode step N+1 while step N executes, on-device
+    sampling, bounded `--max-in-flight` window) and gates admission on the
+    costmodel-predicted token latency against `--slo-ms` (the paper's
+    unfinished overlapping-streams path, §2.4).
 
 All scheduling logic lives in `repro.launch.scheduler`; this module only
 parses arguments, builds the model/requests, and reports.
@@ -43,7 +48,8 @@ import numpy as np
 
 from repro import configs
 from repro.core import hal
-from repro.core.dispatch import ExecutionStream, KernelDispatcher, ProgramCache
+from repro.core.dispatch import (AsyncExecutionStream, ExecutionStream,
+                                 KernelDispatcher, ProgramCache)
 from repro.launch.scheduler import SAMPLING_MODES, SCHEDULES, Request, \
     make_scheduler, merge_prefill_caches
 from repro.models.model import build_model
@@ -69,8 +75,17 @@ def run(argv=None) -> dict:
     ap.add_argument("--schedule", default="continuous",
                     choices=sorted(SCHEDULES),
                     help="continuous = slot-masked batched decode with "
-                         "mid-flight admission; sequential = one request "
-                         "at a time (parity reference)")
+                         "mid-flight admission; slo = overlapped decode "
+                         "(async stream) with SLO-aware admission; "
+                         "sequential = one request at a time (parity "
+                         "reference)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="slo schedule only: admit a queued request only "
+                         "while the costmodel-predicted token latency stays "
+                         "under this many milliseconds (default: no limit)")
+    ap.add_argument("--max-in-flight", type=int, default=8,
+                    help="slo schedule only: bounded in-flight submission "
+                         "window of the async stream")
     ap.add_argument("--sampling", default="greedy", choices=SAMPLING_MODES,
                     help="greedy argmax or seeded categorical sampling")
     ap.add_argument("--weight-form", default="fp16", choices=WEIGHT_FORMS,
@@ -113,11 +128,17 @@ def run(argv=None) -> dict:
     max_len = max(lens) + args.gen
 
     program_cache = ProgramCache()
-    stream = ExecutionStream(program_cache, target=target)
+    extra = {}
+    if args.schedule == "slo":
+        stream = AsyncExecutionStream(program_cache, target=target,
+                                      max_in_flight=args.max_in_flight)
+        extra = {"slo_ms": args.slo_ms, "max_in_flight": args.max_in_flight}
+    else:
+        stream = ExecutionStream(program_cache, target=target)
     sched = make_scheduler(args.schedule, model, params, cfg,
                            n_slots=args.batch, max_len=max_len,
                            sampling=args.sampling, seed=args.seed,
-                           stream=stream)
+                           stream=stream, **extra)
 
     results = []
     t0 = time.perf_counter()
@@ -150,6 +171,12 @@ def run(argv=None) -> dict:
     if dispatcher is not None:
         out["routes"] = dict(Counter(
             (r.kernel, r.backend) for r in dispatcher.routes))
+    slo_note = ""
+    if args.schedule == "slo":
+        slo_note = (f" | in-flight<= {stats['max_in_flight']}, "
+                    f"{stats['deferred_admissions']} deferred admissions, "
+                    f"pred p99 token "
+                    f"{stats['predicted_token_latency_s']*1e3:.2f} ms")
     print(f"{args.schedule} x {args.sampling}: {n_requests} requests "
           f"(lens {lens}) gen {args.gen}: {wall*1e3:.1f} ms "
           f"({serve_wall*1e3:.1f} ms ex-compile, {out['tok_per_s']:.1f} "
@@ -157,7 +184,7 @@ def run(argv=None) -> dict:
           f"dispatches, floor/request "
           f"{stats['per_request_dispatch_overhead_s']*1e6:.1f} us | "
           f"program cache h{program_cache.stats.hits}/"
-          f"m{program_cache.stats.misses}")
+          f"m{program_cache.stats.misses}{slo_note}")
     return out
 
 

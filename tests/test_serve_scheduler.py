@@ -1,19 +1,23 @@
-"""Continuous-batching scheduler suite (tier: serve).
+"""Continuous-batching + overlapped-stream scheduler suite (tier: serve).
 
-Four load-bearing properties of `repro.launch.scheduler`:
+Load-bearing properties of `repro.launch.scheduler`:
 
   * **token-exact parity** — the continuous schedule (bucketed prefill +
     teacher-forced catch-up + slot-masked batched decode + mid-flight
-    admission) produces exactly the sequential reference's greedy token
-    stream, per request, over config x weight form.
+    admission) AND the overlapped SLO schedule (pipelined decode windows on
+    `AsyncExecutionStream`, sampling fused on device) produce exactly the
+    sequential reference's token stream, per request, over config x weight
+    form x sampling mode.
   * **bounded compile set** — heterogeneous prompt lengths hit the
     content-hash ProgramCache with at most `#buckets` prefill programs and
     one decode program: misses <= #buckets x {prefill, decode}.
   * **mid-flight admission** — a request arriving while other lanes are
-    mid-generation is admitted into a freed lane without disturbing them.
-  * **ExecutionStream accounting** — records keep encode order, charge the
-    costmodel floor (`work_s = max(0, wall - floor)`), report queue depth,
-    and `execute_sync` always returns a list.
+    mid-generation is admitted into a freed lane without disturbing them;
+    under an SLO the gate may defer but never starve.
+  * **stream record invariants** — sync and async drains both keep a total
+    encode order (`seq`), charge the costmodel floor
+    (`work_s = max(0, wall - floor)`), carry submit <= complete timestamps,
+    and keep the in-flight depth within the submission window.
 
 Plus the `_merge_prefill` regression: prefill caches merge into decode
 buffers by *named time axis*, raising with the tree path on any rank or
@@ -29,13 +33,14 @@ import pytest
 
 from repro import configs
 from repro.core import hal
-from repro.core.dispatch import (ExecutionStream, KernelDispatcher,
-                                 ProgramCache)
+from repro.core.dispatch import (AsyncExecutionStream, ExecutionStream,
+                                 KernelDispatcher, ProgramCache)
 from repro.launch import serve as serve_mod
 from repro.launch.scheduler import (ContinuousSchedule, Request,
-                                    SequentialSchedule, TokenSampler,
-                                    bucket_for, default_buckets,
-                                    make_scheduler, merge_prefill_caches)
+                                    SequentialSchedule, SLOSchedule,
+                                    TokenSampler, bucket_for,
+                                    default_buckets, make_scheduler,
+                                    merge_prefill_caches)
 from repro.models.model import build_model
 from repro.optim.compression import compress_model_params
 
@@ -63,14 +68,15 @@ def _requests(cfg, lens, gen, arrivals=None, seed=1):
 
 
 def _serve(schedule, arch, form, lens, gen, *, n_slots=3, arrivals=None,
-           sampling="greedy", buckets=None, max_len=None):
+           sampling="greedy", buckets=None, max_len=None, **sched_kw):
     cfg, model, params = _served_model(arch, form)
     cache = ProgramCache()
-    stream = ExecutionStream(cache, target=V5E)
+    stream = (AsyncExecutionStream(cache, target=V5E) if schedule == "slo"
+              else ExecutionStream(cache, target=V5E))
     sched = make_scheduler(schedule, model, params, cfg, n_slots=n_slots,
                            max_len=max_len or max(lens) + gen,
                            sampling=sampling, seed=0, stream=stream,
-                           buckets=buckets)
+                           buckets=buckets, **sched_kw)
     results = sched.run(_requests(cfg, lens, gen, arrivals))
     return {r.rid: r for r in results}, sched
 
@@ -90,29 +96,43 @@ SLOW_PARITY = [("tinyllama-1.1b", "int4_palette"),
                ("granite-8b", "fp16")]
 
 
-def _check_parity(arch, form):
-    cont, csched = _serve("continuous", arch, form, PARITY_LENS, gen=6)
+def _check_parity(arch, form, schedule="continuous"):
+    cont, csched = _serve(schedule, arch, form, PARITY_LENS, gen=6)
     seq, _ = _serve("sequential", arch, form, PARITY_LENS, gen=6)
     assert set(cont) == set(seq) == set(range(len(PARITY_LENS)))
     for rid in cont:
         np.testing.assert_array_equal(
             cont[rid].tokens, seq[rid].tokens,
-            err_msg=f"{arch}/{form} rid={rid}: continuous schedule diverged "
+            err_msg=f"{arch}/{form} rid={rid}: {schedule} schedule diverged "
                     f"from the sequential greedy reference")
         assert cont[rid].tokens.size == 6
     # the sub-bucket prompt went through decode-only admission
     assert cont[1].bucket == 0 and cont[3].bucket == 16
 
 
+@pytest.mark.parametrize("schedule", ["continuous", "slo"])
 @pytest.mark.parametrize("arch,form", FAST_PARITY)
-def test_greedy_parity(arch, form):
-    _check_parity(arch, form)
+def test_greedy_parity(arch, form, schedule):
+    _check_parity(arch, form, schedule)
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("schedule", ["continuous", "slo"])
 @pytest.mark.parametrize("arch,form", SLOW_PARITY)
-def test_greedy_parity_sweep(arch, form):
-    _check_parity(arch, form)
+def test_greedy_parity_sweep(arch, form, schedule):
+    _check_parity(arch, form, schedule)
+
+
+def test_slo_vs_continuous_token_identical():
+    """The pinned three-way: overlapped decode must be bit-identical to the
+    serialized continuous schedule, not merely to the sequential
+    reference (same bucketed prefills, same lane composition)."""
+    slo, _ = _serve("slo", "tinyllama-1.1b", "fp16", PARITY_LENS, gen=6)
+    cont, _ = _serve("continuous", "tinyllama-1.1b", "fp16", PARITY_LENS,
+                     gen=6)
+    for rid in cont:
+        np.testing.assert_array_equal(slo[rid].tokens, cont[rid].tokens)
+        assert slo[rid].bucket == cont[rid].bucket
 
 
 @pytest.mark.slow
@@ -127,7 +147,7 @@ def test_greedy_parity_encdec():
     frames = [np.asarray(rng.normal(size=(cfg.encoder_len, cfg.d_model)),
                          np.float32) for _ in lens]
     outs = {}
-    for schedule in ("continuous", "sequential"):
+    for schedule in ("continuous", "slo", "sequential"):
         sched = make_scheduler(schedule, model, params, cfg, n_slots=2,
                                max_len=24, sampling="greedy", seed=0)
         res = sched.run([Request(rid=i, prompt=prompts[i], max_new_tokens=4,
@@ -135,6 +155,8 @@ def test_greedy_parity_encdec():
         outs[schedule] = {r.rid: r.tokens for r in res}
     for rid in range(3):
         np.testing.assert_array_equal(outs["continuous"][rid],
+                                      outs["sequential"][rid])
+        np.testing.assert_array_equal(outs["slo"][rid],
                                       outs["sequential"][rid])
     # encdec prompts must reach a prefill bucket (cross cache): loud check
     with pytest.raises(ValueError, match="bucket"):
@@ -240,20 +262,238 @@ def test_stream_records_floor_and_order():
     assert stream.total_floor_s() == pytest.approx(3 * stream.floor_s)
 
 
-def test_scheduler_stream_invariants():
-    _, sched = _serve("continuous", "tinyllama-1.1b", "fp16", [16, 9], gen=4,
+def _assert_record_invariants(stream, *, window=None):
+    """The satellite's stream-record invariants, shared by the sync and
+    async drains: monotone encode/submission order, nonnegative work,
+    the costmodel floor charged per dispatch, submit <= complete
+    timestamps, and in-flight depth bounded by the submission window."""
+    recs = stream.records
+    assert recs, "stream retired no records"
+    seqs = [r.seq for r in recs]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    for r in recs:
+        assert r.work_s >= 0.0
+        assert r.floor_s == stream.floor_s
+        assert r.work_s == pytest.approx(max(0.0, r.wall_s - r.floor_s))
+        assert r.complete_ts >= r.submit_ts > 0.0
+        assert r.queue_depth >= 0
+        if window is None:          # sync drain: nothing ever in flight
+            assert r.inflight_depth == 0
+        else:                       # async drain: depth stays inside window
+            assert 0 <= r.inflight_depth < window
+
+
+@pytest.mark.parametrize("schedule", ["continuous", "slo"])
+def test_scheduler_stream_invariants(schedule):
+    _, sched = _serve(schedule, "tinyllama-1.1b", "fp16", [16, 9], gen=4,
                       n_slots=2)
     recs = sched.stream.records
     assert len(recs) >= 3                      # >= 1 prefill + decode steps
-    seqs = [r.seq for r in recs]
-    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    window = sched.stream.max_in_flight if schedule == "slo" else None
+    _assert_record_invariants(sched.stream, window=window)
     assert all(r.floor_s == V5E.dispatch_floor_s for r in recs)
-    assert all(r.work_s >= 0.0 for r in recs)
     # decode dispatches carry the active-lane count as the batch denominator
     assert max(r.batch for r in recs) == 2
     stats = sched.stats(2)
     assert stats["per_request_dispatch_overhead_s"] == pytest.approx(
         len(recs) * V5E.dispatch_floor_s / 2)
+    # NOTE: no `inflight_depth > 0` assertion here — a smoke model's decode
+    # tick is dispatch-overhead-bound on CPU, so the drain often retires
+    # step N before step N+1 submits; observed overlap depth is a property
+    # of the workload, pinned deterministically by the compute-heavy op in
+    # test_async_stream_window_overlaps_deterministically.
+
+
+# ---------------------------------------------------------------------------
+# AsyncExecutionStream: bounded window, background drain, chaining
+# ---------------------------------------------------------------------------
+
+
+def test_async_stream_rejects_bad_window():
+    with pytest.raises(ValueError, match="max_in_flight"):
+        AsyncExecutionStream(ProgramCache(), target=V5E, max_in_flight=0)
+
+
+def test_slo_schedule_rejects_sync_stream():
+    cfg, model, params = _served_model("tinyllama-1.1b", "fp16")
+    with pytest.raises(ValueError, match="AsyncExecutionStream"):
+        SLOSchedule(model, params, cfg, n_slots=1, max_len=16,
+                    stream=ExecutionStream(ProgramCache(), target=V5E))
+
+
+def test_async_stream_submit_chain_and_records():
+    """submit() returns live async outputs that chain into the next encoded
+    op (donated forward), the background drain retires records in
+    submission order, and the in-flight depth never reaches the window."""
+    cache = ProgramCache()
+    stream = AsyncExecutionStream(cache, target=hal.get_target("ane-m1"),
+                                  max_in_flight=2)
+    compiled, key = cache.compile(
+        lambda c, x: (c + x, (c + x).sum()), jnp.zeros((32, 32)),
+        jnp.ones((32, 32)), jit_kwargs={"donate_argnums": (0,)})
+    c, x = jnp.zeros((32, 32)), jnp.ones((32, 32))
+    sums = []
+    for i in range(6):
+        stream.encode_operation(compiled, (c, x), f"op{i}", batch=i + 1)
+        c, s = stream.submit()[0]     # chained donation across submissions
+        sums.append(s)
+    stream.sync()
+    assert stream.in_flight_depth == 0
+    np.testing.assert_allclose([float(v) for v in sums],
+                               [1024.0 * (i + 1) for i in range(6)])
+    recs = stream.records
+    assert [r.key for r in recs] == [f"op{i}" for i in range(6)]
+    assert [r.batch for r in recs] == list(range(1, 7))
+    _assert_record_invariants(stream, window=2)
+    completes = [r.complete_ts for r in recs]
+    assert completes == sorted(completes)      # FIFO drain
+    stream.close()
+
+
+def test_async_stream_window_overlaps_deterministically():
+    """With an op whose device time far exceeds the host's inter-submit
+    gap, the window must actually fill: every submission after the first
+    sees the previous one still in flight (depth 1 under a window of 2),
+    which is the overlap the floor accounting needs to stay truthful."""
+    cache = ProgramCache()
+    stream = AsyncExecutionStream(cache, target=V5E, max_in_flight=2)
+    x = jnp.ones((800, 800))
+    compiled, key = cache.compile(
+        lambda c: (c @ c) / 800.0, x, jit_kwargs={"donate_argnums": (0,)})
+    c = x
+    for i in range(4):
+        stream.encode_operation(compiled, (c,), f"mm{i}")
+        c = stream.submit()[0]        # ~100 ms device work per link
+    stream.sync()
+    depths = [r.inflight_depth for r in stream.records]
+    assert depths[0] == 0
+    assert all(d == 1 for d in depths[1:]), depths
+    _assert_record_invariants(stream, window=2)
+    stream.close()
+
+
+def test_async_execute_sync_keeps_base_contract():
+    """execute_sync on the async stream = drain + the blocking base path:
+    a list in encode order, records with sync semantics (depth 0)."""
+    cache = ProgramCache()
+    stream = AsyncExecutionStream(cache, target=V5E)
+    compiled, key = cache.compile(lambda x: x + 1, jnp.zeros((4,)))
+    stream.encode_operation(compiled, (jnp.zeros((4,)),), key)
+    stream.encode_operation(compiled, (jnp.ones((4,)),), key)
+    outs = stream.execute_sync()
+    assert isinstance(outs, list) and len(outs) == 2
+    np.testing.assert_array_equal(np.asarray(outs[1]), np.full((4,), 2.0))
+    assert stream.execute_sync() == []         # empty queue -> empty list
+    # mixing submit() and execute_sync() keeps one total record order
+    stream.encode_operation(compiled, (jnp.zeros((4,)),), "async-op")
+    stream.submit()
+    stream.encode_operation(compiled, (jnp.zeros((4,)),), "sync-op")
+    stream.execute_sync()
+    seqs = [r.seq for r in stream.records]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    assert [r.key for r in stream.records[-2:]] == ["async-op", "sync-op"]
+
+
+def test_async_stream_surfaces_bad_dispatches():
+    """A dispatch the compiled program rejects (wrong operand shape) must
+    surface as an exception, not vanish into the background drain, and the
+    stream must stay usable afterwards."""
+    cache = ProgramCache()
+    stream = AsyncExecutionStream(cache, target=V5E)
+    ok, okey = cache.compile(lambda x: x + 1, jnp.zeros((3, 3)))
+    stream.encode_operation(ok, (jnp.zeros((5, 5)),), "boom")
+    with pytest.raises(Exception):
+        stream.execute_sync()
+    stream.reset()
+    stream.encode_operation(ok, (jnp.zeros((3, 3)),), okey)
+    outs = stream.execute_sync()
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.ones((3, 3)))
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware admission
+# ---------------------------------------------------------------------------
+
+
+def test_slo_gate_defers_but_never_starves():
+    """An unreachable SLO sheds load: admissions beyond the first are
+    deferred while the engine is busy (counted), yet every request is
+    served (the idle-engine rule forbids starvation) with the exact
+    sequential token streams."""
+    lens = [12, 10, 9]
+    slo, sched = _serve("slo", "tinyllama-1.1b", "fp16", lens, gen=4,
+                        n_slots=3, slo_ms=1e-4)
+    seq, _ = _serve("sequential", "tinyllama-1.1b", "fp16", lens, gen=4)
+    assert set(slo) == set(range(3))
+    for rid in slo:
+        np.testing.assert_array_equal(slo[rid].tokens, seq[rid].tokens)
+    assert sched.deferred_admissions > 0
+    # load was actually shed: later requests were admitted strictly after
+    # the first despite three free lanes at step 0
+    assert min(slo[1].admitted_step, slo[2].admitted_step) \
+        > slo[0].admitted_step
+
+
+def test_slo_gate_open_matches_continuous_admissions():
+    """A generous SLO admits exactly like the continuous schedule."""
+    lens = [12, 10, 9]
+    slo, sched = _serve("slo", "tinyllama-1.1b", "fp16", lens, gen=4,
+                        n_slots=3, slo_ms=1e6)
+    cont, _ = _serve("continuous", "tinyllama-1.1b", "fp16", lens, gen=4,
+                     n_slots=3)
+    assert sched.deferred_admissions == 0
+    for rid in slo:
+        assert slo[rid].admitted_step == cont[rid].admitted_step
+        np.testing.assert_array_equal(slo[rid].tokens, cont[rid].tokens)
+    assert sched.predicted_token_latency_s() > 0.0
+
+
+def test_slo_midflight_admission_parity():
+    """Mid-flight admission under the pipelined schedule: a request
+    arriving later joins a freed lane and every stream stays sequential-
+    exact (windows must stop at the arrival step)."""
+    lens = [16, 12, 14]
+    arrivals = [0, 0, 2]
+    slo, _ = _serve("slo", "tinyllama-1.1b", "fp16", lens, gen=8,
+                    n_slots=2, arrivals=arrivals)
+    seq, _ = _serve("sequential", "tinyllama-1.1b", "fp16", lens, gen=8,
+                    arrivals=arrivals)
+    for rid in range(3):
+        np.testing.assert_array_equal(slo[rid].tokens, seq[rid].tokens)
+    assert slo[2].admitted_step > 0
+
+
+# ---------------------------------------------------------------------------
+# Categorical sampling: schedule invariance under the overlapped stream
+# ---------------------------------------------------------------------------
+
+
+def test_slo_categorical_schedule_invariance():
+    """The satellite case: the per-(request, position) seed fold must make
+    the *on-device* categorical draws of the pipelined windows identical
+    to the host sampler's sequential stream, token for token."""
+    lens = [10, 6]
+    slo, _ = _serve("slo", "tinyllama-1.1b", "fp16", lens, gen=4,
+                    n_slots=2, sampling="categorical")
+    seq, _ = _serve("sequential", "tinyllama-1.1b", "fp16", lens, gen=4,
+                    sampling="categorical")
+    for rid in slo:
+        np.testing.assert_array_equal(slo[rid].tokens, seq[rid].tokens)
+
+
+@pytest.mark.slow
+def test_slo_categorical_invariance_sweep():
+    """Wider categorical invariance: heterogeneous lens incl. decode-only
+    admission, three-way against continuous and sequential."""
+    slo, _ = _serve("slo", "tinyllama-1.1b", "fp16", PARITY_LENS, gen=6,
+                    sampling="categorical")
+    cont, _ = _serve("continuous", "tinyllama-1.1b", "fp16", PARITY_LENS,
+                     gen=6, sampling="categorical")
+    seq, _ = _serve("sequential", "tinyllama-1.1b", "fp16", PARITY_LENS,
+                    gen=6, sampling="categorical")
+    for rid in slo:
+        np.testing.assert_array_equal(slo[rid].tokens, seq[rid].tokens)
+        np.testing.assert_array_equal(cont[rid].tokens, seq[rid].tokens)
 
 
 # ---------------------------------------------------------------------------
@@ -361,6 +601,22 @@ def test_serve_smoke_covers_sampling_modes(sampling):
                                 "8", "--gen", "4", "--schedule",
                                 "continuous", "--sampling", sampling])
         np.testing.assert_array_equal(out["tokens"], single["tokens"])
+
+
+def test_serve_cli_slo_schedule():
+    """`--schedule slo` end to end: warm-started second round, identical
+    tokens to the continuous CLI run, SLO knobs surfaced in the stats."""
+    argv = ["--smoke", "--batch", "2", "--prompt-len", "8", "--gen", "4",
+            "--sampling", "greedy", "--requests", "2"]
+    out = serve_mod.run(argv + ["--schedule", "slo"])
+    cont = serve_mod.run(argv + ["--schedule", "continuous"])
+    np.testing.assert_array_equal(out["tokens"], cont["tokens"])
+    assert out["cache_hits"] > 0
+    assert out["deferred_admissions"] == 0         # no SLO configured
+    assert out["max_in_flight"] >= 1
+    tight = serve_mod.run(argv + ["--schedule", "slo", "--slo-ms", "1e-4"])
+    assert tight["deferred_admissions"] > 0        # load was shed...
+    np.testing.assert_array_equal(tight["tokens"], cont["tokens"])  # ...not dropped
 
 
 @pytest.mark.slow
