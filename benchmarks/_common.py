@@ -1,0 +1,103 @@
+"""Shared harness for the serving benches (batching / overlap / speculative).
+
+Every bench in this directory follows the same discipline: build a smoke
+model routed through the kernel dispatcher, serve heterogeneous request
+rounds through a scheduler, time warm (cache-hit) rounds interleaved so
+host-clock drift hits every schedule equally, write a JSON report next to
+the repo root, and exit nonzero when the acceptance gate fails. This module
+is that discipline, once — the per-bench files keep only what they measure.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import costmodel, hal
+from repro.core.dispatch import KernelDispatcher
+from repro.launch.scheduler import Request
+from repro.models.model import build_model
+
+
+def build_smoke_model(arch: str, target_name: str, seed: int = 0):
+    """(cfg, target, model, params) with dispatcher-routed matmuls."""
+    cfg = configs.get_smoke(arch)
+    target = hal.get_target(target_name)
+    model = build_model(cfg, dispatcher=KernelDispatcher(target))
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, target, model, params
+
+
+def hetero_lens(prompt_len: int, n: int) -> list[int]:
+    """Heterogeneous prompts around `prompt_len`: exercises the bucketed
+    prefill shapes and the teacher-forced catch-up path, not just one."""
+    return [max(2, prompt_len - (i % 3) * (prompt_len // 4))
+            for i in range(n)]
+
+
+def make_requests(cfg, lens, gen: int, *, rid0: int = 0, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid0 + i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=(L,)).astype(np.int32),
+                    max_new_tokens=gen)
+            for i, L in enumerate(lens)]
+
+
+def timed_round(sched, cfg, lens, gen: int, rep: int):
+    """One fresh-rid serving round; returns (wall_s, {local rid: tokens})."""
+    reqs = make_requests(cfg, lens, gen, rid0=rep * len(lens))
+    t0 = time.perf_counter()
+    results = sched.run(reqs)
+    wall = time.perf_counter() - t0
+    return wall, {r.rid - rep * len(lens): r.tokens for r in results}
+
+
+def interleaved_best_of(scheds: dict, cfg, lens, gen: int, reps: int):
+    """Warm every schedule once, then time `reps` identical warm rounds per
+    schedule, *interleaved* (round of A, round of B, round of A, ...) so
+    host-clock drift hits every side equally; best-of-N per schedule is the
+    slope-method discipline. Greedy streams are identical across rounds, so
+    one round's tokens represent all. Returns (best walls, tokens)."""
+    for sched in scheds.values():
+        sched.run(make_requests(cfg, lens, gen, rid0=0))
+    best = {name: float("inf") for name in scheds}
+    toks = {}
+    for rep in range(1, reps + 1):
+        for name, sched in scheds.items():
+            wall, t = timed_round(sched, cfg, lens, gen, rep)
+            best[name] = min(best[name], wall)
+            toks[name] = t
+    return best, toks
+
+
+def modeled_step_s(cfg, target, batch: int, ctx_len: int) -> float:
+    """Costmodel roofline estimate of ONE batched decode step on `target`:
+    max(flops/peak, bytes/bandwidth) with the full weight read plus the KV/
+    recurrent state the step touches — the work term of the §9 split (the
+    floor term comes from the stream ledger, not from here)."""
+    shape = configs.ShapeConfig("decode_bench", ctx_len, batch, "decode")
+    flops = costmodel.model_flops(cfg, shape) \
+        + costmodel.attention_flops(cfg, shape)
+    bytes_ = costmodel.weight_bytes(cfg) \
+        + costmodel.kv_cache_bytes(cfg, shape)
+    return max(flops / target.peak_flops, bytes_ / target.hbm_bandwidth)
+
+
+def emit_report(report: dict, out_path: str) -> None:
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"-> {os.path.abspath(out_path)}")
+
+
+def gate(failures: list) -> int:
+    """Print every failure to stderr; exit code for main()."""
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0

@@ -32,71 +32,32 @@ the CI gate alongside the §9.4 amortization check.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
-import time
 
-import jax
 import numpy as np
 
 from repro import configs
 from repro.core import hal
 from repro.core.dispatch import (AsyncExecutionStream, ExecutionStream,
-                                 KernelDispatcher, ProgramCache)
-from repro.launch.scheduler import ContinuousSchedule, Request, SLOSchedule
-from repro.models.model import build_model
+                                 ProgramCache)
+from repro.launch.scheduler import ContinuousSchedule, SLOSchedule
+
+from benchmarks._common import (build_smoke_model, emit_report, gate,
+                                hetero_lens, interleaved_best_of)
 
 LANES = (4, 16)
 
 
-def _requests(cfg, lens, gen, *, rid0: int = 0, seed: int = 0):
-    rng = np.random.default_rng(seed)
-    return [Request(rid=rid0 + i,
-                    prompt=rng.integers(0, cfg.vocab, size=(L,)).astype(np.int32),
-                    max_new_tokens=gen)
-            for i, L in enumerate(lens)]
-
-
-def _timed_round(sched, cfg, lens, gen, rep: int):
-    reqs = _requests(cfg, lens, gen, rid0=rep * len(lens))
-    t0 = time.perf_counter()
-    results = sched.run(reqs)
-    wall = time.perf_counter() - t0
-    return wall, {r.rid - rep * len(lens): r.tokens for r in results}
-
-
-def _run_interleaved(scheds: dict, cfg, lens, gen, reps: int):
-    """Warm every schedule once, then time `reps` identical warm rounds
-    per schedule, *interleaved* (sync round, async round, sync round, ...)
-    so host-clock drift hits both sides equally; best-of-N per schedule is
-    the slope-method discipline. Greedy streams are identical across
-    rounds, so one round's tokens represent all."""
-    for sched in scheds.values():
-        sched.run(_requests(cfg, lens, gen, rid0=0))
-    best = {name: float("inf") for name in scheds}
-    toks = {}
-    for rep in range(1, reps + 1):
-        for name, sched in scheds.items():
-            wall, t = _timed_round(sched, cfg, lens, gen, rep)
-            best[name] = min(best[name], wall)
-            toks[name] = t
-    return best, toks
-
-
 def bench(arch: str, *, prompt_len: int, gen: int, target_name: str,
           max_in_flight: int, reps: int = 3, seed: int = 0) -> dict:
-    cfg = configs.get_smoke(arch)
-    target = hal.get_target(target_name)
-    model = build_model(cfg, dispatcher=KernelDispatcher(target))
-    params = model.init(jax.random.PRNGKey(seed))
+    cfg, target, model, params = build_smoke_model(arch, target_name, seed)
 
     curve = []
     for n_slots in LANES:
         # heterogeneous prompts around prompt_len: bucketed prefills + the
         # teacher-forced catch-up path, not just one shape
-        lens = [max(2, prompt_len - (i % 3) * (prompt_len // 4))
-                for i in range(n_slots)]
+        lens = hetero_lens(prompt_len, n_slots)
         max_len = max(lens) + gen
         n_tokens = gen * n_slots
 
@@ -111,7 +72,7 @@ def bench(arch: str, *, prompt_len: int, gen: int, target_name: str,
                 model, params, cfg, n_slots=n_slots, max_len=max_len,
                 stream=async_stream, sampling="greedy", seed=seed),
         }
-        best, toks = _run_interleaved(scheds, cfg, lens, gen, reps)
+        best, toks = interleaved_best_of(scheds, cfg, lens, gen, reps)
         sync_wall, async_wall = best["sync"], best["async"]
 
         parity = all(np.array_equal(toks["sync"][i], toks["async"][i])
@@ -174,24 +135,20 @@ def main(argv=None) -> int:
     report = bench(args.arch, prompt_len=args.prompt_len, gen=args.gen,
                    target_name=args.target, max_in_flight=args.max_in_flight,
                    reps=args.reps)
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=1)
-    print(f"-> {os.path.abspath(args.out)}")
+    emit_report(report, args.out)
 
-    failed = False
+    failures = []
     for row in report["curve"]:
         if not row["token_parity"]:
-            print(f"FAIL: lanes={row['n_slots']}: overlapped greedy tokens "
-                  f"diverged from the serialized schedule", file=sys.stderr)
-            failed = True
+            failures.append(f"lanes={row['n_slots']}: overlapped greedy "
+                            f"tokens diverged from the serialized schedule")
         if row["async_s_per_token"] >= row["sync_s_per_token"]:
-            print(f"FAIL: lanes={row['n_slots']}: overlapped decode "
-                  f"({row['async_s_per_token']*1e6:.1f} us/tok) is not "
-                  f"faster than execute_sync "
-                  f"({row['sync_s_per_token']*1e6:.1f} us/tok)",
-                  file=sys.stderr)
-            failed = True
-    return 1 if failed else 0
+            failures.append(
+                f"lanes={row['n_slots']}: overlapped decode "
+                f"({row['async_s_per_token']*1e6:.1f} us/tok) is not faster "
+                f"than execute_sync "
+                f"({row['sync_s_per_token']*1e6:.1f} us/tok)")
+    return gate(failures)
 
 
 if __name__ == "__main__":

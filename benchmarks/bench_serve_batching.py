@@ -23,35 +23,24 @@ overhead curve is not strictly decreasing.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
-import jax
-import numpy as np
-
 from repro import configs
 from repro.core import hal
-from repro.core.dispatch import ExecutionStream, KernelDispatcher, ProgramCache
-from repro.launch.scheduler import ContinuousSchedule, Request
-from repro.models.model import build_model
+from repro.core.dispatch import ExecutionStream, ProgramCache
+from repro.launch.scheduler import ContinuousSchedule
+
+from benchmarks._common import (build_smoke_model, emit_report, gate,
+                                hetero_lens, make_requests)
 
 BATCH_SIZES = (1, 4, 16)
 
 
 def bench(arch: str, *, n_requests: int, prompt_len: int, gen: int,
           target_name: str, seed: int = 0) -> dict:
-    cfg = configs.get_smoke(arch)
-    target = hal.get_target(target_name)
-    model = build_model(cfg, dispatcher=KernelDispatcher(target))
-    params = model.init(jax.random.PRNGKey(seed))
-    rng = np.random.default_rng(seed)
-    # heterogeneous prompts around prompt_len: exercises the bucketed
-    # prefill shapes, not just one
-    lens = [max(2, prompt_len - (i % 3) * (prompt_len // 4))
-            for i in range(n_requests)]
-    prompts = [rng.integers(0, cfg.vocab, size=(L,)).astype(np.int32)
-               for L in lens]
+    cfg, target, model, params = build_smoke_model(arch, target_name, seed)
+    lens = hetero_lens(prompt_len, n_requests)
     max_len = max(lens) + gen
 
     curve = []
@@ -60,9 +49,7 @@ def bench(arch: str, *, n_requests: int, prompt_len: int, gen: int,
         sched = ContinuousSchedule(model, params, cfg, n_slots=n_slots,
                                    max_len=max_len, stream=stream,
                                    sampling="greedy", seed=seed)
-        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=gen)
-                for i in range(n_requests)]
-        results = sched.run(reqs)
+        results = sched.run(make_requests(cfg, lens, gen, seed=seed))
         assert len(results) == n_requests
         stats = sched.stats(n_requests)
         curve.append({
@@ -119,16 +106,14 @@ def main(argv=None) -> int:
     report = bench(args.arch, n_requests=args.requests,
                    prompt_len=args.prompt_len, gen=args.gen,
                    target_name=args.target)
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=1)
     print(f"amortization 1 -> {BATCH_SIZES[-1]} lanes: "
-          f"{report['amortization_x']:.1f}x less dispatch floor per request "
-          f"-> {os.path.abspath(args.out)}")
+          f"{report['amortization_x']:.1f}x less dispatch floor per request")
+    emit_report(report, args.out)
+    failures = []
     if not report["monotonic_decreasing"]:
-        print("FAIL: per-request dispatch overhead is not strictly "
-              "decreasing with batch size", file=sys.stderr)
-        return 1
-    return 0
+        failures.append("per-request dispatch overhead is not strictly "
+                        "decreasing with batch size")
+    return gate(failures)
 
 
 if __name__ == "__main__":

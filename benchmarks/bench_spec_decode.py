@@ -1,0 +1,258 @@
+"""Speculative-decoding economics bench (paper §9.3/§9.4 on the serving stack).
+
+    PYTHONPATH=src python -m benchmarks.bench_spec_decode [--fast]
+
+The paper's decode regime is floor-bound: every dispatch pays the fixed t0
+before any useful work, so per-token cost ~ floor / (tokens per dispatch).
+`SLOSchedule` pipelines one fused step — one floor — per token;
+`SpeculativeSchedule` spends two floors per window (draft + fused
+verify/accept) for up to `draft_depth + 1` emitted tokens. This bench
+serves the same request set through both at decode-lane counts {4, 16} and
+draft depths {2, 4} and compares the **§9-modeled per-token cost**:
+
+    (total floor charged by the stream ledger
+       + model-forwards x costmodel roofline step estimate) / tokens
+
+The floor term is read off the `DispatchRecord` ledger — every draft,
+verify, prefill and admission dispatch of BOTH models charges the target's
+`dispatch_floor_s`, so the drafter's overhead (its prefills, its extra
+window steps, the double verify compute) counts *against* speculation; the
+work term prices each model forward at the HAL target's roofline
+(`max(flops/peak, bytes/bw)`). Host-CPU wall clocks are reported alongside
+but never gated: on this correctness-path host the fused verify's K+1 real
+forwards dominate the microseconds-level dispatch overhead, which inverts
+the floor-bound economics the paper measures (DESIGN.md evidence marks —
+walls here are not accelerator performance).
+
+The gated rows draft with the target itself (`--draft self`, the agreement
+ceiling: with random-init reproduction weights no separately-initialized
+draft model agrees with the target); a depth-pruned `shrink` drafter row is
+reported for the true two-model path, acceptance included and typically ~0
+with random weights.
+
+Writes `BENCH_spec.json` (repo root by default). Exits nonzero unless, at
+16 lanes, speculative decode is strictly cheaper per token than
+`SLOSchedule` at draft depth 2 or 4 with bit-identical greedy streams and
+every draft + verify dispatch visible as a floor-charged record.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+from repro import configs
+from repro.core import hal
+from repro.core.dispatch import AsyncExecutionStream, ProgramCache
+from repro.launch.scheduler import SLOSchedule
+from repro.launch.speculative import Drafter, SpeculativeSchedule
+
+from benchmarks._common import (build_smoke_model, emit_report, gate,
+                                hetero_lens, interleaved_best_of,
+                                make_requests, modeled_step_s)
+
+LANES = (4, 16)
+DEPTHS = (2, 4)
+
+
+def _ledger_round(sched, cfg, lens, gen):
+    """One fresh round on a fresh scheduler: the per-round dispatch ledger
+    (floor charges and model-forward counts are identical every round)."""
+    results = sched.run(make_requests(cfg, lens, gen, rid0=0))
+    toks = {r.rid: r.tokens for r in results}
+    return toks, sched.stats(len(lens))
+
+
+def bench(arch: str, *, prompt_len: int, gen: int, target_name: str,
+          reps: int = 3, seed: int = 0) -> dict:
+    cfg, target, model, params = build_smoke_model(arch, target_name, seed)
+    floor = target.dispatch_floor_s
+    drafter_self = Drafter.self_draft(model, params, cfg)
+    drafter_shrink = Drafter.shrink(cfg, dispatcher=model.dispatcher)
+
+    def make_sched(kind, n_slots, max_len, **kw):
+        stream = AsyncExecutionStream(ProgramCache(), target=target)
+        if kind == "slo":
+            return SLOSchedule(model, params, cfg, n_slots=n_slots,
+                               max_len=max_len, stream=stream,
+                               sampling="greedy", seed=seed)
+        return SpeculativeSchedule(model, params, cfg, n_slots=n_slots,
+                                   max_len=max_len, stream=stream,
+                                   sampling="greedy", seed=seed, **kw)
+
+    curve = []
+    for n_slots in LANES:
+        lens = hetero_lens(prompt_len, n_slots)
+        max_len = max(lens) + gen
+        n_tokens = gen * n_slots
+        w_step = modeled_step_s(cfg, target, n_slots, max_len)
+        w_draft = modeled_step_s(drafter_shrink.cfg, target, n_slots, max_len)
+
+        # -- the §9 ledger, one fresh round per schedule (the same warm
+        # scheduler then serves the timed wall rounds: stats are
+        # snapshotted here, so no program compiles twice) ------------------
+        slo = make_sched("slo", n_slots, max_len)
+        slo_toks, slo_stats = _ledger_round(slo, cfg, lens, gen)
+        slo_steps = sum(1 for r in slo.stream.records
+                        if r.key in slo._decode_keys)
+        slo_modeled = (slo_stats["floor_s"] + slo_steps * w_step) / n_tokens
+
+        row = {
+            "n_slots": n_slots,
+            "n_requests": n_slots,
+            "prompt_lens": lens,
+            "slo": {
+                "n_dispatches": slo_stats["n_dispatches"],
+                "floor_s": slo_stats["floor_s"],
+                "decode_steps": slo_steps,
+                "modeled_s_per_token": slo_modeled,
+                "tokens_per_dispatch":
+                    n_tokens / max(slo_stats["n_dispatches"], 1),
+            },
+            "spec": {},
+        }
+        scheds = {"slo": slo}
+        for depth in DEPTHS:
+            spec = make_sched("spec", n_slots, max_len,
+                              draft_depth=depth, drafter=drafter_self)
+            spec_toks, st = _ledger_round(spec, cfg, lens, gen)
+            recs = spec.stream.records
+            window_recs = [r for r in recs
+                           if r.key in spec._draft_keys
+                           or r.key in spec._verify_keys]
+            ledger_ok = (
+                st["verify_dispatches"] == st["n_windows"]
+                and st["draft_dispatches"] >= 1
+                and all(r.floor_s == floor > 0.0 for r in window_recs))
+            # self-draft: the drafter is the target, so its steps price at
+            # the target's roofline step (the shrink row uses w_draft)
+            work = (st["verify_steps"] + st["draft_steps"]
+                    + 2 * st["catchup_steps"]) * w_step
+            modeled = (st["floor_s"] + work) / n_tokens
+            parity = all(np.array_equal(spec_toks[r], slo_toks[r])
+                         for r in slo_toks)
+            row["spec"][str(depth)] = {
+                "draft": "self",
+                "n_dispatches": st["n_dispatches"],
+                "floor_s": st["floor_s"],
+                "n_windows": st["n_windows"],
+                "draft_dispatches": st["draft_dispatches"],
+                "verify_dispatches": st["verify_dispatches"],
+                "acceptance_rate": st["acceptance_rate"],
+                "tokens_per_window_dispatch":
+                    st["tokens_per_window_dispatch"],
+                "modeled_s_per_token": modeled,
+                "speedup_vs_slo_x": slo_modeled / modeled,
+                "token_parity": bool(parity),
+                "ledger_ok": bool(ledger_ok),
+            }
+            scheds[f"spec{depth}"] = spec
+            print(f"lanes={n_slots:3d} depth={depth}: modeled "
+                  f"{modeled*1e6:8.1f} us/tok vs slo "
+                  f"{slo_modeled*1e6:8.1f} us/tok "
+                  f"({slo_modeled/modeled:.2f}x), acceptance "
+                  f"{st['acceptance_rate']:.2f}, "
+                  f"{st['tokens_per_window_dispatch']:.2f} tok/window-"
+                  f"dispatch, parity={parity}")
+
+        # -- host walls, warm + interleaved (reported, never gated) ---------
+        best, toks = interleaved_best_of(scheds, cfg, lens, gen, reps)
+        for name, wall in best.items():
+            key = "slo" if name == "slo" else ("spec", name[len("spec"):])
+            entry = row["slo"] if name == "slo" else row["spec"][key[1]]
+            entry["host_wall_s_per_token"] = wall / n_tokens
+        for name in scheds:
+            if name == "slo":
+                continue
+            if not all(np.array_equal(toks[name][r], toks["slo"][r])
+                       for r in toks["slo"]):
+                row["spec"][name[len("spec"):]]["token_parity"] = False
+
+        # -- the true two-model path (reported: acceptance is the story) ----
+        shr = make_sched("spec", n_slots, max_len, draft_depth=DEPTHS[0],
+                         drafter=drafter_shrink)
+        shr_toks, shr_stats = _ledger_round(shr, cfg, lens, gen)
+        work = (shr_stats["verify_steps"] * w_step
+                + shr_stats["draft_steps"] * w_draft
+                + shr_stats["catchup_steps"] * (w_step + w_draft))
+        row["spec_shrink"] = {
+            "draft": "shrink",
+            "draft_depth": DEPTHS[0],
+            "acceptance_rate": shr_stats["acceptance_rate"],
+            "modeled_s_per_token":
+                (shr_stats["floor_s"] + work) / n_tokens,
+            "token_parity": bool(all(
+                np.array_equal(shr_toks[r], slo_toks[r])
+                for r in slo_toks)),
+        }
+        curve.append(row)
+
+    return {
+        "arch": cfg.name,
+        "target": target.name,
+        "dispatch_floor_s": floor,
+        "gen": gen,
+        "lanes": list(LANES),
+        "depths": list(DEPTHS),
+        "reps": reps,
+        "modeled_metric": "(ledger floor charges + model-forwards x "
+                          "roofline step) / tokens; host walls reported, "
+                          "not gated (correctness-path CPU)",
+        "curve": curve,
+        "paper_ref": "§9.3 dispatch floor + §9.4 amortization: more tokens "
+                     "per dispatch is the only decode lever",
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=configs.ARCH_NAMES)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI mode: short prompts/gen")
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=15)
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed warm rounds per (schedule, lanes), "
+                         "interleaved; best wall is reported")
+    ap.add_argument("--target", default="tpu-v5e",
+                    choices=sorted(hal.TARGETS))
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_spec.json"))
+    args = ap.parse_args(argv)
+
+    if args.fast:
+        args.prompt_len, args.gen, args.reps = 12, 6, 2
+
+    report = bench(args.arch, prompt_len=args.prompt_len, gen=args.gen,
+                   target_name=args.target, reps=args.reps)
+    emit_report(report, args.out)
+
+    failures = []
+    for row in report["curve"]:
+        wins = []
+        for depth, cell in row["spec"].items():
+            if not cell["token_parity"]:
+                failures.append(
+                    f"lanes={row['n_slots']} depth={depth}: speculative "
+                    f"greedy tokens diverged from SLOSchedule")
+            if not cell["ledger_ok"]:
+                failures.append(
+                    f"lanes={row['n_slots']} depth={depth}: draft/verify "
+                    f"dispatches missing from the floor ledger")
+            if cell["token_parity"] and cell["modeled_s_per_token"] \
+                    < row["slo"]["modeled_s_per_token"]:
+                wins.append(depth)
+        if row["n_slots"] == max(LANES) and not wins:
+            failures.append(
+                f"lanes={row['n_slots']}: speculative decode is not "
+                f"strictly cheaper per token than SLOSchedule at any "
+                f"draft depth in {list(report['depths'])}")
+    return gate(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

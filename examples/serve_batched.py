@@ -33,10 +33,16 @@ def main():
     ap.add_argument("--sampling", default="greedy",
                     choices=("greedy", "categorical"))
     ap.add_argument("--schedule", default="continuous",
-                    choices=("continuous", "slo"))
+                    choices=("continuous", "slo", "spec"))
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="slo schedule: defer admissions while the "
                          "predicted token latency exceeds this")
+    ap.add_argument("--draft-depth", type=int, default=4,
+                    help="spec schedule: drafter proposals per window")
+    ap.add_argument("--draft", default="self", choices=("self", "shrink"),
+                    help="spec schedule: draft with the target itself "
+                         "(accept-all ceiling) or a depth-pruned second "
+                         "model (random-init: low acceptance)")
     args = ap.parse_args()
 
     print(f"serving {args.arch} (reduced config), batch={args.batch}, "
@@ -52,6 +58,9 @@ def main():
             "--requests", "2"]
     if args.schedule == "slo" and args.slo_ms is not None:
         argv += ["--slo-ms", str(args.slo_ms)]
+    if args.schedule == "spec":
+        argv += ["--draft", args.draft, "--draft-depth",
+                 str(args.draft_depth)]
     out = serve.run(argv)
     # compile-once discipline: the second identical request round must
     # warm-start from the content-hash program cache — a zero hit rate means
@@ -70,6 +79,12 @@ def main():
               f"{out['deferred_admissions']} admissions deferred by the "
               f"SLO gate, predicted p99 token latency "
               f"{out['predicted_token_latency_s']*1e3:.2f} ms")
+    elif args.schedule == "spec":
+        print(f"speculative decode: {args.draft} drafter depth "
+              f"{args.draft_depth}, {out['n_windows']} windows, "
+              f"acceptance {out['acceptance_rate']:.2f}, "
+              f"{out['tokens_per_window_dispatch']:.2f} tokens per "
+              f"window dispatch (two floors buy up to depth+1 tokens, §9)")
     # batching amortization, the paper's §9.4 point: the same requests
     # served one at a time pay the full dispatch floor each
     single = serve.run(["--arch", args.arch, "--smoke", "--batch", "1",

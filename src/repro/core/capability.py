@@ -52,6 +52,12 @@ def _one_op_graph(op: str) -> tuple[Callable, tuple]:
             a.reshape(1, 1, 1, 4, 8), jnp.ones((1, 1, 1, 3, 3), jnp.float32),
             (1, 1, 1), "SAME"), (x,)),
         "softmax": (lambda a: jax.nn.softmax(a, axis=-1), (x,)),
+        "avg_pool": (lambda a: jax.lax.reduce_window(
+            a.reshape(1, 1, 4, 8), 0.0, jax.lax.add, (1, 1, 2, 2),
+            (1, 1, 2, 2), "VALID") / 4.0, (x,)),
+        "max_pool": (lambda a: jax.lax.reduce_window(
+            a.reshape(1, 1, 4, 8), -jnp.inf, jax.lax.max, (1, 1, 2, 2),
+            (1, 1, 2, 2), "VALID"), (x,)),
         "layer_norm": (lambda a: (a - a.mean(-1, keepdims=True))
                        / (a.std(-1, keepdims=True) + 1e-5), (x,)),
         "relu": (jax.nn.relu, (x,)),
@@ -141,7 +147,8 @@ def _probe_ops() -> list[str]:
             "sigmoid", "tanh", "gelu", "exp", "log", "sin", "cos", "erf",
             "reduce_prod", "cumsum", "scatter", "gather", "one_hot",
             "transpose", "reshape", "concat", "slice", "pad",
-            "attention_fused", "logical_and", "mod", "non_zero"]
+            "attention_fused", "logical_and", "mod", "non_zero",
+            "avg_pool", "max_pool", "argmax"]
 
 
 def attested_vs_reachable(target: Target) -> list[tuple[str, bool, bool]]:

@@ -148,6 +148,7 @@ _ANE_OPS_COMMON = {
     "avg_pool": True, "max_pool": True,
     "relu": True, "sigmoid": True, "tanh": True, "gelu": True, "swish": True,
     "softmax": True, "erf": True, "exp": True, "log": True,
+    "argmax": True,   # hw argmax port, gated by feature byte 0x4f2_argmax_hw
     "reshape": True, "transpose": True, "concat": True, "split": True,
     "pad": True, "slice": True, "cumsum": True,
     # attested-but-unreachable (paper §4.4: capability byte set, lowering fails)

@@ -405,10 +405,67 @@ def _register_act_lut() -> None:
 
 
 # ---------------------------------------------------------------------------
+# specdec — fused speculative-decoding verify/accept
+# ---------------------------------------------------------------------------
+
+
+def _specdec_inputs(case: ShapeCase, dtype, rng) -> dict:
+    b, t, v = case.dims
+    scores = _normal(rng, (b, t, v), dtype).astype(jnp.float32)
+    # draft proposals with varied agreement: per lane, copy the target's
+    # pick for a random-length prefix, then diverge — every accept length
+    # from reject-at-once to accept-all shows up in the sweep
+    picks = np.asarray(jnp.argmax(scores, axis=-1))
+    draft = rng.integers(0, v, size=(b, max(t - 1, 0))).astype(np.int32)
+    for i in range(b):
+        keep = int(rng.integers(0, t))              # 0..t-1 matching tokens
+        draft[i, :keep] = picks[i, :keep]
+        if keep < t - 1:                            # force the first mismatch
+            draft[i, keep] = (picks[i, keep] + 1) % v
+    return {"scores": scores, "draft": jnp.asarray(draft)}
+
+
+def _specdec_packed(fn, i):
+    samples, accept = fn(i["scores"], i["draft"])
+    return jnp.concatenate([samples, accept[:, None]], axis=1)
+
+
+def _register_specdec() -> None:
+    from repro.kernels.specdec.ref import verify_accept_ref
+    from repro.kernels.specdec.specdec import verify_accept_kernel
+
+    register(KernelSpec(
+        name="specdec",
+        # the resample is an argmax at heart (hw-gated by the ANE's
+        # 0x4f2_argmax_hw feature byte); targets without it fall the
+        # verify/accept back to the jnp oracle inside the serving program
+        capability_op="argmax",
+        dtypes=(jnp.float32,),          # sampler math is fp32 by contract
+        cases=(
+            # dims = (B, K+1 window positions, vocab)
+            ShapeCase("window", (4, 5, 512)),
+            ShapeCase("deep", (2, 9, 384)),
+            ShapeCase("ragged_vocab", (3, 4, 301), edge=True),
+            ShapeCase("bonus_only", (2, 1, 128), edge=True),   # K = 0
+            ShapeCase("tiny", (1, 2, 8), edge=True),
+        ),
+        make_inputs=_specdec_inputs,
+        run_kernel=lambda i: _specdec_packed(verify_accept_kernel, i),
+        run_oracle=lambda i: _specdec_packed(verify_accept_ref, i),
+        tol=lambda dt: (0.0, 0.0),      # integer outputs: exact or wrong
+        cost=lambda c, dt: OpCost(
+            f"specdec/{c.name}",
+            2.0 * c.dims[0] * c.dims[1] * c.dims[2],   # max + first-index min
+            4.0 * c.dims[0] * c.dims[1] * (c.dims[2] + 2.0)),
+    ))
+
+
+# ---------------------------------------------------------------------------
 # Registration (import-time, idempotent via the duplicate guard)
 # ---------------------------------------------------------------------------
 
 
 for _reg in (_register_anemm, _register_palette, _register_sparse,
-             _register_flash, _register_decode, _register_act_lut):
+             _register_flash, _register_decode, _register_act_lut,
+             _register_specdec):
     _reg()

@@ -1,0 +1,23 @@
+"""Oracle reference for the specdec verify/accept kernel.
+
+Pure jnp (traceable, so the capability-gated dispatcher can fall back to it
+inside a compiled serving program): per-position first-index argmax over the
+score rows, then the matched-prefix length against the draft tokens. The
+conformance sweep pins the Pallas kernel to this, case by case.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def verify_accept_ref(scores: jnp.ndarray, draft: jnp.ndarray):
+    """scores (B, T, V) fp32, draft (B, T-1) int32 ->
+    (samples (B, T) int32, accept_len (B,) int32)."""
+    b, t, _ = scores.shape
+    samples = jnp.argmax(scores.astype(jnp.float32), axis=-1).astype(jnp.int32)
+    if t == 1:
+        return samples, jnp.zeros((b,), jnp.int32)
+    matches = (draft.astype(jnp.int32) == samples[:, : t - 1])
+    alive = jnp.cumprod(matches.astype(jnp.int32), axis=1)
+    return samples, jnp.sum(alive, axis=1).astype(jnp.int32)

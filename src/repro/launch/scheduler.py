@@ -194,6 +194,13 @@ def _admit_leaf(path, dst, src, slot):
         f"buffer {dst.shape} (mismatched axes {diff})")
 
 
+def _admit_into_slot_impl(dec_caches, pf_caches, slot):
+    """Traceable admission body (speculative's joint two-model admission
+    fuses this for target AND drafter caches inside one dispatch)."""
+    return compat.tree_map_with_path(
+        lambda p, d, s: _admit_leaf(p, d, s, slot), dec_caches, pf_caches)
+
+
 @partial(jax.jit, donate_argnums=(0,))
 def _admit_into_slot(dec_caches, pf_caches, slot):
     """One on-stream dispatch per admission: merge a batch-1 prefill cache
@@ -202,19 +209,15 @@ def _admit_into_slot(dec_caches, pf_caches, slot):
     so the bucketing compile bound stays `#buckets x {prefill, decode}` —
     but executed through the ExecutionStream so the floor ledger charges
     it."""
-    return compat.tree_map_with_path(
-        lambda p, d, s: _admit_leaf(p, d, s, slot), dec_caches, pf_caches)
+    return _admit_into_slot_impl(dec_caches, pf_caches, slot)
 
 
 # one fused dispatch for the sequential reference's whole-batch merge
 _merge_prefill_jit = jax.jit(merge_prefill_caches, donate_argnums=(0,))
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _reset_slot(dec_caches, slot):
-    """Clear lane `slot` for a decode-only admission (no prefill prefix):
-    `pos` lanes to -1 (nothing valid), recurrent/conv state to zeros (the
-    init_cache state), KV payload left as-is (masked by pos)."""
+def _reset_slot_impl(dec_caches, slot):
+    """Traceable reset body (see `_admit_into_slot_impl`)."""
     def reset(path, dst):
         name = _leaf_name(path)
         if name == "pos":
@@ -223,6 +226,14 @@ def _reset_slot(dec_caches, slot):
             return dst
         return dst.at[:, slot].set(jnp.zeros_like(dst[:, slot]))
     return compat.tree_map_with_path(reset, dec_caches)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _reset_slot(dec_caches, slot):
+    """Clear lane `slot` for a decode-only admission (no prefill prefix):
+    `pos` lanes to -1 (nothing valid), recurrent/conv state to zeros (the
+    init_cache state), KV payload left as-is (masked by pos)."""
+    return _reset_slot_impl(dec_caches, slot)
 
 
 # ---------------------------------------------------------------------------
@@ -810,19 +821,33 @@ SCHEDULES = {
     "sequential": SequentialSchedule,
     "continuous": ContinuousSchedule,
     "slo": SLOSchedule,
+    # "spec" (SpeculativeSchedule) registers itself from launch.speculative,
+    # imported at the bottom of this module
 }
+
+# schedule-specific knobs `make_scheduler` strips for everyone else
+_SLO_KW = ("slo_ms",)
+_SPEC_KW = ("draft_depth", "draft", "drafter")
 
 
 def make_scheduler(schedule: str, model, params, cfg, *, n_slots: int,
                    max_len: int, **kw) -> _SchedulerBase:
     if schedule not in SCHEDULES:
         raise ValueError(f"schedule {schedule!r} not in {sorted(SCHEDULES)}")
-    if schedule == "slo":
-        return SLOSchedule(model, params, cfg, n_slots=n_slots,
-                           max_len=max_len, **kw)
-    kw.pop("slo_ms", None)           # SLO knobs are slo-schedule-only
-    kw.pop("max_in_flight", None)
-    if schedule == "continuous":
-        return ContinuousSchedule(model, params, cfg, n_slots=n_slots,
-                                  max_len=max_len, **kw)
-    return SequentialSchedule(model, params, cfg, max_len=max_len, **kw)
+    if schedule != "slo":
+        for key in _SLO_KW:
+            kw.pop(key, None)
+    if schedule != "spec":
+        for key in _SPEC_KW:
+            kw.pop(key, None)
+    if schedule not in ("slo", "spec"):   # in-flight window is async-only
+        kw.pop("max_in_flight", None)
+    if schedule == "sequential":
+        return SequentialSchedule(model, params, cfg, max_len=max_len, **kw)
+    return SCHEDULES[schedule](model, params, cfg, n_slots=n_slots,
+                               max_len=max_len, **kw)
+
+
+# registers SCHEDULES["spec"]; the bottom import keeps the cycle harmless
+# (this module is fully defined by the time speculative imports it back)
+from repro.launch import speculative as _speculative  # noqa: E402,F401

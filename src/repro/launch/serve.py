@@ -32,6 +32,13 @@ The paper's serving shape (ch. 2/5/14), end to end:
     sampling, bounded `--max-in-flight` window) and gates admission on the
     costmodel-predicted token latency against `--slo-ms` (the paper's
     unfinished overlapping-streams path, §2.4).
+  * **speculative decoding** — `--schedule spec` serves draft->verify
+    windows on the async stream: a drafter (`--draft shrink` depth-pruned
+    second model / `--draft self` the target itself) proposes
+    `--draft-depth` tokens in one dispatch, and one fused verify dispatch
+    resamples them on device through the `specdec` kernel — two dispatch
+    floors buy up to depth+1 tokens (§9 economics), token-exact against
+    the sequential reference.
 
 All scheduling logic lives in `repro.launch.scheduler`; this module only
 parses arguments, builds the model/requests, and reports.
@@ -52,6 +59,7 @@ from repro.core.dispatch import (AsyncExecutionStream, ExecutionStream,
                                  KernelDispatcher, ProgramCache)
 from repro.launch.scheduler import SAMPLING_MODES, SCHEDULES, Request, \
     make_scheduler, merge_prefill_caches
+from repro.launch.speculative import DRAFT_KINDS
 from repro.models.model import build_model
 from repro.optim.compression import compress_model_params
 from repro.parallel.ctx import ParallelContext
@@ -77,8 +85,20 @@ def run(argv=None) -> dict:
                     help="continuous = slot-masked batched decode with "
                          "mid-flight admission; slo = overlapped decode "
                          "(async stream) with SLO-aware admission; "
-                         "sequential = one request at a time (parity "
-                         "reference)")
+                         "spec = speculative draft->verify windows on the "
+                         "async stream (--draft-depth proposals per window, "
+                         "fused on-device verify/accept); sequential = one "
+                         "request at a time (parity reference)")
+    ap.add_argument("--draft-depth", type=int, default=4,
+                    help="spec schedule only: drafter proposals per window "
+                         "(each window pays two dispatch floors for up to "
+                         "draft-depth + 1 emitted tokens)")
+    ap.add_argument("--draft", default="shrink", choices=DRAFT_KINDS,
+                    help="spec schedule only: 'shrink' builds a depth-pruned "
+                         "draft model from the target config (the real "
+                         "two-model path; with random-init weights its "
+                         "proposals rarely match), 'self' drafts with the "
+                         "target itself (the agreement ceiling)")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="slo schedule only: admit a queued request only "
                          "while the costmodel-predicted token latency stays "
@@ -133,6 +153,10 @@ def run(argv=None) -> dict:
         stream = AsyncExecutionStream(program_cache, target=target,
                                       max_in_flight=args.max_in_flight)
         extra = {"slo_ms": args.slo_ms, "max_in_flight": args.max_in_flight}
+    elif args.schedule == "spec":
+        stream = AsyncExecutionStream(program_cache, target=target,
+                                      max_in_flight=args.max_in_flight)
+        extra = {"draft_depth": args.draft_depth, "draft": args.draft}
     else:
         stream = ExecutionStream(program_cache, target=target)
     sched = make_scheduler(args.schedule, model, params, cfg,
@@ -177,6 +201,12 @@ def run(argv=None) -> dict:
                     f"{stats['deferred_admissions']} deferred admissions, "
                     f"pred p99 token "
                     f"{stats['predicted_token_latency_s']*1e3:.2f} ms")
+    elif args.schedule == "spec":
+        slo_note = (f" | {args.draft} drafter depth {args.draft_depth}: "
+                    f"{stats['n_windows']} windows, acceptance "
+                    f"{stats['acceptance_rate']:.2f}, "
+                    f"{stats['tokens_per_window_dispatch']:.2f} "
+                    f"tok/window-dispatch")
     print(f"{args.schedule} x {args.sampling}: {n_requests} requests "
           f"(lens {lens}) gen {args.gen}: {wall*1e3:.1f} ms "
           f"({serve_wall*1e3:.1f} ms ex-compile, {out['tok_per_s']:.1f} "

@@ -1,0 +1,590 @@
+"""Speculative decoding on the overlapped stream (paper §9 economics).
+
+The paper's dispatch-floor measurements (§9.3/§9.4) put a fixed t0 on every
+command the engine executes; decode pays it once per token, so the only way
+to go faster per token is more tokens per dispatch. Speculative decoding is
+that lever on the serving stack:
+
+  * **Drafter** — a second, cheaper model sharing the target's tokenizer and
+    vocab: `draft_of(cfg)` depth-prunes any registry config into a draft
+    config (same widths, so prompts/frames are shared verbatim and every
+    internal divisibility constraint holds for every family), built through
+    `models.build_model` so its matmuls route through the kernel dispatcher
+    like every other model. `Drafter.self_draft` reuses the target itself —
+    the agreement ceiling (with random-init reproduction weights, the only
+    drafter whose proposals align with the target's).
+  * **draft window** — one dispatch runs K drafter decode steps fused
+    (`lax.scan`), proposing tokens with the *same* seeded rule the verifier
+    resamples with (greedy argmax / per-(rid, pos) fold_in categorical), so
+    a drafter that equals the target is accepted in full.
+  * **fused verify/accept** — one dispatch runs K+1 target decode steps
+    teacher-forced on the proposals, perturbs the fp32 logit rows with the
+    per-(rid, pos) gumbel of `jax.random.categorical` when sampling, and
+    routes the `specdec` kernel (accept-prefix + bonus resample, on device).
+    Emitted tokens are always the target sampler's picks, so greedy streams
+    are token-exact against `SequentialSchedule` and categorical streams are
+    schedule-invariant whatever the drafter proposed.
+  * **KV rollback on rejection** — the window writes K speculative positions
+    into the resident (donated) caches; rejected ones must not survive.
+    Positional leaves (`k`/`v`/`pos`/`c_kv`/`k_rope`, slot = pos % size, so
+    sliding-window layers wrap) save the about-to-be-clobbered slots before
+    the scan and restore every slot past the accept point after it.
+    Recurrent leaves (SSM state/conv tails, RG-LRU h) are snapshotted per
+    scan step and the per-lane snapshot at the accept point is kept. The
+    drafter's own caches are best-effort (proposals need no exactness): a
+    rejection may dent its next proposals, never the emitted stream.
+  * **floor accounting** — both the draft and the verify dispatch are
+    encoded on `self.stream`: two floor-charged `DispatchRecord`s per window
+    for up to K+1 emitted tokens. That is the honest §9 ledger the
+    `bench_spec_decode` gate reads; an off-stream dispatch would fake the
+    win.
+
+Windows are pipelined on `AsyncExecutionStream`: the draft dispatch is
+submitted without blocking, the verify dispatch chains the live draft-token
+tensor, and the host syncs once per window (accept lengths are data, so the
+host must read them before planning the next window).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dispatch import AsyncExecutionStream
+from repro.kernels import compat
+from repro.kernels.specdec import ops as specdec_ops
+from repro.launch.scheduler import (SCHEDULES, TIME_MERGE_LEAVES,
+                                    ContinuousSchedule, _admit_into_slot_impl,
+                                    _leaf_name, _reset_slot_impl, bucket_for)
+from repro.models.model import build_model
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _reset_both_slots(t_caches, d_caches, slot):
+    """Decode-only admission, both models in ONE dispatch: the drafter's
+    lane hygiene must not double the per-admission floor charge."""
+    return (_reset_slot_impl(t_caches, slot),
+            _reset_slot_impl(d_caches, slot))
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _admit_both_slots(t_caches, d_caches, pf_t, pf_d, slot):
+    """Write target AND drafter prefill state into lane `slot` in ONE
+    dispatch (resident buffers donated), mirroring `_admit_into_slot`."""
+    return (_admit_into_slot_impl(t_caches, pf_t, slot),
+            _admit_into_slot_impl(d_caches, pf_d, slot))
+
+# ---------------------------------------------------------------------------
+# Draft models
+# ---------------------------------------------------------------------------
+
+
+def draft_of(cfg) -> Any:
+    """The shrink rule: depth-prune any registry config into a draft config.
+
+    Widths (d_model, heads, d_ff, SSM/LRU dims) are kept so the draft shares
+    the target's tokenizer, vocab, prompts and encdec frames verbatim and
+    every family's divisibility constraints hold unchanged; depth drops to
+    one layer (one block-pattern period for hybrids, one encoder layer for
+    encdec). MoE layers prune to their dense path (experts_per_token worth
+    of compute is drafting overhead, not drafting signal); MTP heads drop.
+    """
+    n_layers = len(cfg.block_pattern) if cfg.block_pattern else 1
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-draft",
+        n_layers=n_layers,
+        # every draft layer dense: layer_is_moe(i) is i >= n_dense_layers
+        n_dense_layers=n_layers if cfg.n_experts else cfg.n_dense_layers,
+        n_encoder_layers=min(cfg.n_encoder_layers, 1),
+        mtp_depth=0,
+    )
+
+
+@dataclasses.dataclass
+class Drafter:
+    """A draft model + params, served alongside the target.
+
+    Built through `build_model`, so its projections/MLPs/attention resolve
+    through the kernel dispatcher (packed weight forms included) exactly
+    like the target — the first second-model subsystem on the stack.
+    """
+
+    model: Any
+    params: Any
+    cfg: Any
+    kind: str = "shrink"
+
+    @classmethod
+    def shrink(cls, cfg, *, dispatcher=None, seed: int = 0) -> "Drafter":
+        dcfg = draft_of(cfg)
+        model = build_model(dcfg, dispatcher=dispatcher)
+        params = model.init(jax.random.PRNGKey(seed + 1))
+        return cls(model, params, dcfg, kind="shrink")
+
+    @classmethod
+    def self_draft(cls, model, params, cfg) -> "Drafter":
+        """Draft with the target itself: proposals equal the target's picks
+        by construction (accept-all) — the amortization ceiling, and the
+        only aligned drafter when weights are random-init."""
+        return cls(model, params, cfg, kind="self")
+
+
+DRAFT_KINDS = ("shrink", "self")
+
+
+# ---------------------------------------------------------------------------
+# The schedule
+# ---------------------------------------------------------------------------
+
+
+class SpeculativeSchedule(ContinuousSchedule):
+    """Draft -> verify windows pipelined on `AsyncExecutionStream`.
+
+    Admission, bucketed prefill and teacher-forced prompt catch-up follow
+    `ContinuousSchedule` (the drafter is prefilled/caught-up in lockstep so
+    its context matches the target's); once every active lane is sampling,
+    decode proceeds in windows of `--draft-depth` proposals:
+
+        draft dispatch   : K+1 fused drafter steps -> proposals (B, K)
+        verify dispatch  : K+1 fused target steps, teacher-forced on the
+                           proposals; seeded scores -> `specdec` kernel ->
+                           per-lane (samples, accept_len); rejected cache
+                           writes rolled back on device; donated caches.
+
+    Each window emits `accept_len + 1` tokens per lane for exactly two
+    floor-charged `DispatchRecord`s — the §9 economics the bench gates on.
+    """
+
+    name = "spec"
+
+    #: in-flight window when this schedule builds its own stream: draft and
+    #: verify of one window overlap with host encode; 2 is the natural depth
+    MAX_IN_FLIGHT = 2
+
+    def __init__(self, model, params, cfg, *, n_slots: int, max_len: int,
+                 draft_depth: int = 4, draft: str = "shrink",
+                 drafter: Drafter | None = None,
+                 max_in_flight: int = MAX_IN_FLIGHT,
+                 stream=None, program_cache=None, target=None, **kw) -> None:
+        if stream is None:
+            stream = AsyncExecutionStream(program_cache, target=target,
+                                          max_in_flight=max_in_flight)
+        if not isinstance(stream, AsyncExecutionStream):
+            raise ValueError(
+                "SpeculativeSchedule pipelines draft->verify windows through "
+                f"AsyncExecutionStream; got {type(stream).__name__}")
+        super().__init__(model, params, cfg, n_slots=n_slots, max_len=max_len,
+                         stream=stream, program_cache=program_cache,
+                         target=target, **kw)
+        if draft_depth < 1:
+            raise ValueError(f"draft_depth must be >= 1, got {draft_depth}")
+        if drafter is None:
+            if draft not in DRAFT_KINDS:
+                raise ValueError(f"draft {draft!r} not in {DRAFT_KINDS}")
+            drafter = (Drafter.self_draft(model, params, cfg)
+                       if draft == "self"
+                       else Drafter.shrink(cfg, dispatcher=model.dispatcher))
+        if drafter.cfg.vocab != cfg.vocab:
+            raise ValueError(
+                f"drafter vocab {drafter.cfg.vocab} != target vocab "
+                f"{cfg.vocab}; speculative decoding shares the tokenizer")
+        self.drafter = drafter
+        self.draft_depth = draft_depth
+        self.draft_caches = None
+        self._min_ring = None     # resolved from the live caches, memoized
+        self.n_windows = 0
+        self.proposed = 0
+        self.accepted = 0
+        self.emitted = 0
+        # model-forward counters for the §9 work term of bench_spec_decode
+        self.draft_steps = 0      # drafter decode steps inside draft windows
+        self.verify_steps = 0     # target decode steps inside verify passes
+        self.catchup_steps = 0    # joint teacher-forced ticks (1 step each)
+        self._draft_keys: set[str] = set()
+        self._verify_keys: set[str] = set()
+        self._draft_memo: dict = {}
+        self._verify_memo: dict = {}
+        self._joint_memo: dict = {}
+        # one stable function object, so every admission resolves through
+        # the ProgramCache (identity-keyed warm start, hits counted) instead
+        # of a private shape memo the cache statistics would never see
+        t_model, d_model = self.model, self.drafter.model
+
+        def joint_prefill(params, dparams, batch):
+            pf_t, logits = t_model.prefill(params, batch)
+            pf_d, _ = d_model.prefill(dparams, batch)
+            return pf_t, logits, pf_d
+
+        self._joint_prefill_fn = joint_prefill
+
+    # -- fused programs ------------------------------------------------------
+    def _draft_program(self, tok, p0, rids, k: int):
+        """K+1 fused drafter steps: consume the chain starting at `tok`,
+        propose with the target sampler's exact seeded rule (greedy argmax /
+        fold_in categorical), keep the token chain on device. The extra
+        step consumes the last proposal so that on an accept-all window the
+        drafter's consumed stream stays contiguous with the next window's
+        first token (a skipped position is harmless to a KV drafter but
+        desyncs a recurrent one); its proposal is discarded."""
+        sig = (k, tok.shape, p0.shape)
+        hit = self._draft_memo.get(sig)
+        if hit is not None:
+            return hit
+        model, vocab = self.drafter.model, self.cfg.vocab
+        mode, root = self.sampler.mode, self.sampler._root
+
+        def fused(params, caches, tok0, p0, rids):
+            def body(carry, i):
+                caches, tok = carry
+                caches, lg = model.decode_step(params, caches, tok, p0 + i)
+                row = lg[:, -1, :vocab].astype(jnp.float32)
+                if mode == "greedy":
+                    prop = jnp.argmax(row, axis=-1).astype(jnp.int32)
+                else:
+                    def draw(rid, p, r):
+                        key = jax.random.fold_in(
+                            jax.random.fold_in(root, rid), p)
+                        return jax.random.categorical(key, r)
+                    prop = jax.vmap(draw)(rids, p0 + i + 1, row) \
+                        .astype(jnp.int32)
+                return (caches, prop[:, None]), prop
+            (caches, _), props = jax.lax.scan(body, (caches, tok0),
+                                              jnp.arange(k + 1))
+            return caches, jnp.transpose(props[:k])      # (B, K)
+
+        compiled, key = self.cache.compile(
+            fused, self.drafter.params, self.draft_caches, tok, p0, rids,
+            jit_kwargs={"donate_argnums": (1,)})
+        self._draft_keys.add(key)
+        hit = (compiled, key)
+        self._draft_memo[sig] = hit
+        return hit
+
+    def _verify_program(self, tok, p0, drafts, rids, k: int):
+        """K+1 fused target steps teacher-forced on the proposals, the
+        `specdec` verify/accept kernel, and on-device rollback of every
+        rejected cache write — one dispatch, one floor."""
+        sig = (k, tok.shape, p0.shape)
+        hit = self._verify_memo.get(sig)
+        if hit is not None:
+            return hit
+        model, vocab = self.model, self.cfg.vocab
+        mode, root = self.sampler.mode, self.sampler._root
+        disp = self.model.dispatcher
+
+        def fused(params, caches, tok0, p0, drafts, rids):
+            pairs, treedef = compat.tree_flatten_with_path(caches)
+            names = [_leaf_name(p) for p, _ in pairs]
+            pos_idx = [i for i, n in enumerate(names)
+                       if n in TIME_MERGE_LEAVES]
+            rec_idx = [i for i, n in enumerate(names)
+                       if n not in TIME_MERGE_LEAVES]
+
+            def slots_of(leaf):
+                # positional leaves are (stack, B, S, ...): the window will
+                # write slots (p0+1 .. p0+k) % S (ring for windowed layers)
+                size = leaf.shape[2]
+                return (p0[:, None] + 1 + jnp.arange(k)[None]) % size
+
+            def gather(leaf, slots):
+                idx = slots.reshape((1,) + slots.shape
+                                    + (1,) * (leaf.ndim - 3))
+                return jnp.take_along_axis(leaf, idx, axis=2)
+
+            saved = [gather(pairs[i][1], slots_of(pairs[i][1]))
+                     for i in pos_idx] if k else []
+
+            def body(carry, i):
+                caches, tok = carry
+                caches, lg = model.decode_step(params, caches, tok, p0 + i)
+                row = lg[:, -1, :vocab].astype(jnp.float32)
+                if k:
+                    nxt = jax.lax.dynamic_slice_in_dim(
+                        drafts, jnp.minimum(i, k - 1), 1, axis=1)
+                else:
+                    nxt = tok                      # K = 0: value never used
+                snaps = [jax.tree.flatten(caches)[0][j] for j in rec_idx]
+                return (caches, nxt), (row, snaps)
+
+            (caches, _), (rows, snaps) = jax.lax.scan(
+                body, (caches, tok0), jnp.arange(k + 1))
+            scores = jnp.transpose(rows, (1, 0, 2))      # (B, K+1, V)
+            positions = p0[:, None] + 1 + jnp.arange(k + 1)[None]
+            scores = specdec_ops.seeded_scores(scores, root, rids,
+                                               positions, mode)
+            samples, accept = specdec_ops.verify_accept(scores, drafts,
+                                                        dispatcher=disp)
+            # rollback: keep exactly the state of the accepted prefix
+            leaves = list(jax.tree.flatten(caches)[0])
+            for j, i in enumerate(rec_idx):
+                snap = snaps[j]                          # (K+1, stack, B, ..)
+                idx = accept.reshape((1, 1, -1)
+                                     + (1,) * (snap.ndim - 3))
+                leaves[i] = jnp.take_along_axis(snap, idx, axis=0)[0]
+            if k:
+                rejected = (jnp.arange(1, k + 1)[None] > accept[:, None])
+                for j, i in enumerate(pos_idx):
+                    leaf = leaves[i]
+                    slots = slots_of(leaf)
+                    cur = gather(leaf, slots)
+                    m = rejected.reshape((1,) + rejected.shape
+                                         + (1,) * (leaf.ndim - 3))
+                    vals = jnp.where(m, saved[j], cur)
+                    barr = jnp.arange(leaf.shape[1])[:, None]
+                    leaves[i] = leaf.at[:, barr, slots].set(vals)
+            return treedef.unflatten(leaves), samples, accept
+
+        compiled, key = self.cache.compile(
+            fused, self.params, self.caches, tok, p0, drafts, rids,
+            jit_kwargs={"donate_argnums": (1,)})
+        self._verify_keys.add(key)
+        hit = (compiled, key)
+        self._verify_memo[sig] = hit
+        return hit
+
+    def _joint_program(self, tok, pos):
+        """Prompt catch-up: one dispatch steps target AND drafter on the
+        same teacher-forced token, keeping the drafter's context synced."""
+        sig = (tok.shape, pos.shape)
+        hit = self._joint_memo.get(sig)
+        if hit is not None:
+            return hit
+        t_model, d_model = self.model, self.drafter.model
+
+        def fused(params, dparams, caches, dcaches, tok, pos):
+            caches, lg = t_model.decode_step(params, caches, tok, pos)
+            dcaches, _ = d_model.decode_step(dparams, dcaches, tok, pos)
+            return caches, dcaches, lg
+
+        compiled, key = self.cache.compile(
+            fused, self.params, self.drafter.params, self.caches,
+            self.draft_caches, tok, pos,
+            jit_kwargs={"donate_argnums": (2, 3)})
+        hit = (compiled, key)
+        self._joint_memo[sig] = hit
+        return hit
+
+    def _joint_prefill_program(self, batch: dict):
+        """Target + drafter prefill fused into ONE program: admission pays
+        the same per-request floor count as the single-model schedules (the
+        drafter rides the dispatch, it does not add one). Compile-or-hit
+        per bucket shape through the content-hash ProgramCache."""
+        return self.cache.compile(self._joint_prefill_fn, self.params,
+                                  self.drafter.params, batch)
+
+    # -- admission (drafter in lockstep, fused dispatches) -------------------
+    def _admit(self, slot_idx: int, req, step: int) -> None:
+        """`ContinuousSchedule._admit` semantics with the drafter admitted in
+        the SAME dispatches: one joint prefill + one joint lane write (or one
+        joint reset), so speculation's admission floor cost matches the
+        baseline schedules dispatch for dispatch."""
+        slot = self.slots[slot_idx]
+        L = req.prompt.size
+        bucket = bucket_for(L, self.buckets)
+        sidx = jnp.asarray(slot_idx, jnp.int32)
+        if bucket == 0:
+            self.stream.encode_operation(
+                _reset_both_slots, (self.caches, self.draft_caches, sidx),
+                "spec_reset_slot", batch=1)
+            self.caches, self.draft_caches = self.stream.execute_sync()[0]
+            slot.next_pos, slot.next_tok = 0, int(req.prompt[0])
+        else:
+            batch = self._prefill_batch(req.prompt[None, :bucket], req.frames)
+            prefill, pkey = self._joint_prefill_program(batch)
+            self.stream.encode_operation(
+                prefill, (self.params, self.drafter.params, batch), pkey,
+                batch=1)
+            pf_t, logits, pf_d = self.stream.execute_sync()[0]
+            self.stream.encode_operation(
+                _admit_both_slots,
+                (self.caches, self.draft_caches, pf_t, pf_d, sidx),
+                "spec_admit_slot", batch=1)
+            self.caches, self.draft_caches = self.stream.execute_sync()[0]
+            slot.next_pos = bucket
+            if bucket < L:        # catch up through decode, teacher-forced
+                slot.next_tok = int(req.prompt[bucket])
+            else:                 # prompt fully prefilled: sample token L
+                tok = self.sampler(np.asarray(logits)[0, -1], req.rid, L)
+                slot.generated.append(tok)
+                slot.next_tok = tok
+        slot.req = req
+        slot.bucket = bucket
+        slot.admitted_step = step
+
+    # -- the serve loop ------------------------------------------------------
+    def run(self, requests: list) -> list:
+        for r in requests:
+            self._check(r)
+        queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        if self.caches is None:
+            self.caches = self.model.init_cache(self.n_slots, self.max_len)
+        if self.draft_caches is None:
+            self.draft_caches = self.drafter.model.init_cache(
+                self.n_slots, self.max_len)
+        results: list = []
+        step = 0
+        while queue or any(s.active for s in self.slots):
+            for i, slot in enumerate(self.slots):
+                if not queue or queue[0].arrival > step:
+                    break
+                if not slot.active:
+                    self._admit(i, queue.pop(0), step)
+            # a fully-prefilled request can finish without a decode step
+            for s in list(self.slots):
+                if s.active and s.generating \
+                        and len(s.generated) >= s.req.max_new_tokens:
+                    self._advance_finished(s, results, step)
+            active = [s for s in self.slots if s.active]
+            if not active:
+                if queue:
+                    step += 1     # idle tick: wait for the next arrival
+                    continue
+                break
+            if any(s.next_pos + 1 < s.req.prompt.size for s in active):
+                step = self._catchup_step(results, step)
+            else:
+                step = self._spec_window(queue, results, step)
+        results.sort(key=lambda r: r.rid)
+        return results
+
+    def _catchup_step(self, results: list, step: int) -> int:
+        """One joint teacher-forced tick while any lane is still inside its
+        prompt — continuous-schedule semantics, drafter synced for free."""
+        n = self.n_slots
+        tok = np.zeros((n, 1), np.int32)
+        pos = np.zeros((n,), np.int32)
+        n_active = 0
+        for i, s in enumerate(self.slots):
+            if s.active:
+                tok[i, 0] = s.next_tok
+                pos[i] = s.next_pos
+                n_active += 1
+        tokj, posj = jnp.asarray(tok), jnp.asarray(pos)
+        prog, key = self._joint_program(tokj, posj)
+        self.stream.encode_operation(
+            prog, (self.params, self.drafter.params, self.caches,
+                   self.draft_caches, tokj, posj), key, batch=n_active)
+        self.caches, self.draft_caches, logits = self.stream.execute_sync()[0]
+        self.catchup_steps += 1
+        lg = np.asarray(logits[:, -1, : self.cfg.vocab], np.float32)
+        for i, s in enumerate(self.slots):
+            if s.active:
+                self._advance(s, lg[i], results, step)
+        return step + 1
+
+    def _min_positional_size(self) -> int:
+        """Smallest slot-axis extent over the target's positional cache
+        leaves (sliding-window layers keep a ring of `attn_window` slots).
+        A window deeper than ring-1 would wrap onto its own step-0 slot and
+        the rollback save/restore would resurrect pre-window state over a
+        committed write — so `_window_depth` clamps against this."""
+        if self._min_ring is None:
+            sizes = [leaf.shape[2] for path, leaf in
+                     compat.tree_flatten_with_path(self.caches)[0]
+                     if _leaf_name(path) in TIME_MERGE_LEAVES]
+            self._min_ring = min(sizes) if sizes else self.max_len
+        return self._min_ring
+
+    def _window_depth(self, active: list, queue: list, step: int) -> int:
+        """Draft depth this window: never past a lane's cache end, never
+        deep enough to wrap a sliding-window ring onto the slot being
+        committed, never more proposals than the hungriest lane can still
+        emit, and never blowing past a queued arrival that could claim a
+        free lane."""
+        k = self.draft_depth
+        k = min(k, self._min_positional_size() - 1)
+        k = min(k, min(self.max_len - 1 - s.next_pos for s in active))
+        k = min(k, max(s.req.max_new_tokens - len(s.generated)
+                       for s in active) - 1)
+        if queue and any(not s.active for s in self.slots):
+            k = min(k, max(1, queue[0].arrival - step) - 1)
+        return max(k, 0)
+
+    def _spec_window(self, queue: list, results: list, step: int) -> int:
+        active = [s for s in self.slots if s.active]
+        k = self._window_depth(active, queue, step)
+        n = self.n_slots
+        tok = np.zeros((n, 1), np.int32)
+        p0 = np.zeros((n,), np.int32)
+        rids = np.zeros((n,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.active:
+                tok[i, 0] = s.next_tok
+                p0[i] = s.next_pos
+                rids[i] = s.req.rid
+        tokj = jnp.asarray(tok)
+        p0j = jnp.asarray(p0)
+        ridsj = jnp.asarray(rids)
+        if k > 0:
+            prog, dkey = self._draft_program(tokj, p0j, ridsj, k)
+            self.stream.encode_operation(
+                prog, (self.drafter.params, self.draft_caches, tokj, p0j,
+                       ridsj), dkey, batch=len(active))
+            # submit without blocking: the proposal tensor chains straight
+            # into the verify dispatch as a live async value
+            self.draft_caches, drafts = self.stream.submit()[0]
+            self.draft_steps += k + 1
+        else:
+            drafts = jnp.zeros((n, 0), jnp.int32)
+        prog, vkey = self._verify_program(tokj, p0j, drafts, ridsj, k)
+        self.stream.encode_operation(
+            prog, (self.params, self.caches, tokj, p0j, drafts, ridsj),
+            vkey, batch=len(active))
+        self.caches, samples, accept = self.stream.submit()[0]
+        self.stream.sync()      # accept lengths are data: one sync per window
+        samples = np.asarray(samples)
+        accept = np.asarray(accept)
+        self.n_windows += 1
+        self.verify_steps += k + 1
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            a = int(accept[i])
+            self.proposed += k
+            self.accepted += a
+            room = s.req.max_new_tokens - len(s.generated)
+            take = min(a + 1, room)
+            s.generated.extend(int(t) for t in samples[i, :take])
+            self.emitted += take
+            s.next_pos = int(p0[i]) + a + 1
+            s.next_tok = int(samples[i, a])
+            if len(s.generated) >= s.req.max_new_tokens:
+                self._advance_finished(s, results, step + take)
+        return step + k + 1
+
+    # -- reporting -----------------------------------------------------------
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else 1.0
+
+    def stats(self, n_requests: int) -> dict:
+        out = super().stats(n_requests)
+        recs = self.stream.records
+        draft_recs = sum(1 for r in recs if r.key in self._draft_keys)
+        verify_recs = sum(1 for r in recs if r.key in self._verify_keys)
+        out.update({
+            "draft_depth": self.draft_depth,
+            "drafter": self.drafter.kind,
+            "n_windows": self.n_windows,
+            "draft_dispatches": draft_recs,
+            "verify_dispatches": verify_recs,
+            "proposed": self.proposed,
+            "accepted": self.accepted,
+            "acceptance_rate": self.acceptance_rate,
+            "emitted_tokens": self.emitted,
+            "tokens_per_window_dispatch":
+                self.emitted / max(draft_recs + verify_recs, 1),
+            "draft_steps": self.draft_steps,
+            "verify_steps": self.verify_steps,
+            "catchup_steps": self.catchup_steps,
+        })
+        return out
+
+
+SCHEDULES["spec"] = SpeculativeSchedule

@@ -45,6 +45,17 @@ class TestCapability:
         gap = [op for op, att, reach in rows if att and not reach]
         assert "conv3d" in gap
 
+    def test_pooling_and_argmax_probe_rows(self):
+        # the op-by-device matrix covers the pooling rows (paper's conv/
+        # pooling families, registry-bound next) and the argmax port the
+        # specdec verify/accept kernel gates on (0x4f2_argmax_hw)
+        for op in ("avg_pool", "max_pool", "argmax"):
+            v = capability.confirm_op(op, hal.TPU_V5E)
+            assert v.reachable, v
+            assert hal.ANE_M1.reaches(op), op
+        assert {"avg_pool", "max_pool", "argmax"} \
+            <= set(capability._probe_ops())
+
 
 class TestSegmenter:
     def _ops(self, arch="tinyllama-1.1b", shape="decode_32k", n=7):

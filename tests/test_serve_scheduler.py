@@ -41,6 +41,7 @@ from repro.launch.scheduler import (ContinuousSchedule, Request,
                                     TokenSampler, bucket_for,
                                     default_buckets, make_scheduler,
                                     merge_prefill_caches)
+from repro.launch.speculative import Drafter, SpeculativeSchedule, draft_of
 from repro.models.model import build_model
 from repro.optim.compression import compress_model_params
 
@@ -71,7 +72,8 @@ def _serve(schedule, arch, form, lens, gen, *, n_slots=3, arrivals=None,
            sampling="greedy", buckets=None, max_len=None, **sched_kw):
     cfg, model, params = _served_model(arch, form)
     cache = ProgramCache()
-    stream = (AsyncExecutionStream(cache, target=V5E) if schedule == "slo"
+    stream = (AsyncExecutionStream(cache, target=V5E)
+              if schedule in ("slo", "spec")
               else ExecutionStream(cache, target=V5E))
     sched = make_scheduler(schedule, model, params, cfg, n_slots=n_slots,
                            max_len=max_len or max(lens) + gen,
@@ -96,8 +98,9 @@ SLOW_PARITY = [("tinyllama-1.1b", "int4_palette"),
                ("granite-8b", "fp16")]
 
 
-def _check_parity(arch, form, schedule="continuous"):
-    cont, csched = _serve(schedule, arch, form, PARITY_LENS, gen=6)
+def _check_parity(arch, form, schedule="continuous", **sched_kw):
+    cont, csched = _serve(schedule, arch, form, PARITY_LENS, gen=6,
+                          **sched_kw)
     seq, _ = _serve("sequential", arch, form, PARITY_LENS, gen=6)
     assert set(cont) == set(seq) == set(range(len(PARITY_LENS)))
     for rid in cont:
@@ -108,6 +111,7 @@ def _check_parity(arch, form, schedule="continuous"):
         assert cont[rid].tokens.size == 6
     # the sub-bucket prompt went through decode-only admission
     assert cont[1].bucket == 0 and cont[3].bucket == 16
+    return csched
 
 
 @pytest.mark.parametrize("schedule", ["continuous", "slo"])
@@ -283,13 +287,14 @@ def _assert_record_invariants(stream, *, window=None):
             assert 0 <= r.inflight_depth < window
 
 
-@pytest.mark.parametrize("schedule", ["continuous", "slo"])
+@pytest.mark.parametrize("schedule", ["continuous", "slo", "spec"])
 def test_scheduler_stream_invariants(schedule):
     _, sched = _serve(schedule, "tinyllama-1.1b", "fp16", [16, 9], gen=4,
                       n_slots=2)
     recs = sched.stream.records
     assert len(recs) >= 3                      # >= 1 prefill + decode steps
-    window = sched.stream.max_in_flight if schedule == "slo" else None
+    window = sched.stream.max_in_flight if schedule in ("slo", "spec") \
+        else None
     _assert_record_invariants(sched.stream, window=window)
     assert all(r.floor_s == V5E.dispatch_floor_s for r in recs)
     # decode dispatches carry the active-lane count as the batch denominator
@@ -629,3 +634,234 @@ def test_sampling_parity_categorical():
                     sampling="categorical")
     for rid in cont:
         np.testing.assert_array_equal(cont[rid].tokens, seq[rid].tokens)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: draft -> fused verify/accept windows
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("draft", ["self", "shrink"])
+def test_spec_greedy_parity(draft):
+    """Token-exact greedy parity of the speculative schedule against the
+    sequential reference, with both the accept-all drafter (the target
+    itself) and a disagreeing depth-pruned drafter (rollback exercised)."""
+    sched = _check_parity("tinyllama-1.1b", "fp16", "spec", draft=draft,
+                          draft_depth=3)
+    if draft == "self":
+        assert sched.acceptance_rate == 1.0
+    else:       # random-init shrink drafter: rejections actually happened
+        assert sched.accepted < sched.proposed
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,form", SLOW_PARITY)
+def test_spec_parity_sweep(arch, form):
+    """The existing arch x weight-form sweep, under the rejection-heavy
+    shrink drafter: every rejected window must roll the caches back
+    bit-exactly (recurrent SSM/RG-LRU state included)."""
+    _check_parity(arch, form, "spec", draft="shrink", draft_depth=3)
+
+
+def test_spec_categorical_schedule_invariance():
+    """The on-device gumbel + first-index-argmax of the verify kernel must
+    reproduce the host sampler's per-(rid, pos) categorical stream bit for
+    bit, whatever the drafter proposed."""
+    seq, _ = _serve("sequential", "tinyllama-1.1b", "fp16", [10, 6], gen=4,
+                    sampling="categorical")
+    for draft in ("self", "shrink"):
+        spec, sched = _serve("spec", "tinyllama-1.1b", "fp16", [10, 6],
+                             gen=4, n_slots=2, sampling="categorical",
+                             draft=draft, draft_depth=3)
+        for rid in spec:
+            np.testing.assert_array_equal(spec[rid].tokens, seq[rid].tokens)
+        if draft == "self":
+            # the drafter samples with the same fold_in keys: identical
+            # models draw identical tokens, so nothing is ever rejected
+            assert sched.acceptance_rate == 1.0
+
+
+def test_spec_accept_all_bounds_when_drafter_is_target():
+    """drafter == target => every proposal is accepted: acceptance rate
+    exactly 1.0 and every full-depth window emits draft_depth + 1 tokens
+    for exactly two floor-charged dispatches."""
+    spec, sched = _serve("spec", "tinyllama-1.1b", "fp16", [16, 16], gen=10,
+                         n_slots=2, draft="self", draft_depth=4)
+    assert sched.acceptance_rate == 1.0
+    assert sched.proposed > 0
+    st = sched.stats(2)
+    # token 1 of each lane is sampled at (fully-prefilled) admission; the
+    # remaining 9 come from two accept-all windows: depth 4 (5 tokens) +
+    # depth 3 (the budget cap shrinks the last window) per lane
+    assert st["emitted_tokens"] == 18
+    assert st["verify_dispatches"] == st["n_windows"]
+    assert st["n_windows"] == 2 and st["draft_dispatches"] == 2
+
+
+def test_spec_adversarial_drafter_still_correct():
+    """An adversarial drafter (independently-initialized weights: its
+    proposals are near-uniformly wrong) may slow decode to one token per
+    window but can never change the emitted stream."""
+    cfg, model, params = _served_model("tinyllama-1.1b", "fp16")
+    adversary = Drafter.shrink(cfg, dispatcher=model.dispatcher, seed=123)
+    spec, sched = _serve("spec", "tinyllama-1.1b", "fp16", [12, 9], gen=6,
+                         n_slots=2, drafter=adversary, draft_depth=4)
+    seq, _ = _serve("sequential", "tinyllama-1.1b", "fp16", [12, 9], gen=6)
+    for rid in spec:
+        np.testing.assert_array_equal(spec[rid].tokens, seq[rid].tokens)
+    assert sched.acceptance_rate < 0.5
+    assert sched.accepted < sched.proposed     # rejections really occurred
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,lens,gen", [
+    # recurrentgemma: sliding-window KV is a RING (slot = pos % window);
+    # prompt 28 + gen 14 > window 32, so rejected speculative writes WRAP
+    # and clobber live history — rollback must restore the old entries,
+    # not just mask the junk
+    ("recurrentgemma-9b", [28, 20], 14),
+    # mamba2: no KV at all — rollback is purely recurrent-state selection
+    ("mamba2-1.3b", [16, 9], 8),
+])
+def test_spec_kv_rollback_on_rejection(arch, lens, gen):
+    spec, sched = _serve("spec", arch, "fp16", lens, gen,
+                         n_slots=2, draft="shrink", draft_depth=3)
+    seq, _ = _serve("sequential", arch, "fp16", lens, gen)
+    for rid in spec:
+        np.testing.assert_array_equal(
+            spec[rid].tokens, seq[rid].tokens,
+            err_msg=f"{arch} rid={rid}: rollback corrupted the stream")
+    assert sched.accepted < sched.proposed     # the rollback path ran
+
+
+def test_spec_depth_clamped_to_cache_geometry():
+    """An absurd draft depth is clamped by the cache end — the stream must
+    stay token-exact instead of wrapping speculative writes past max_len."""
+    spec, sched = _serve("spec", "tinyllama-1.1b", "fp16", [12, 9], gen=6,
+                         n_slots=2, draft="self", draft_depth=50)
+    seq, _ = _serve("sequential", "tinyllama-1.1b", "fp16", [12, 9], gen=6)
+    for rid in spec:
+        np.testing.assert_array_equal(spec[rid].tokens, seq[rid].tokens)
+    assert sched._min_positional_size() == 12 + 6     # full-cache slots
+
+
+@pytest.mark.slow
+def test_spec_depth_clamped_to_ring_window():
+    """A draft depth past a sliding-window ring would wrap the rollback
+    onto the slot being committed; the window-depth clamp must keep the
+    rejection-heavy stream exact anyway."""
+    spec, sched = _serve("spec", "recurrentgemma-9b", "fp16", [28, 20],
+                         gen=10, n_slots=2, draft="shrink", draft_depth=100)
+    seq, _ = _serve("sequential", "recurrentgemma-9b", "fp16", [28, 20],
+                    gen=10)
+    for rid in spec:
+        np.testing.assert_array_equal(spec[rid].tokens, seq[rid].tokens)
+    # smoke recurrentgemma's local-attention ring is 32 slots
+    assert sched._min_positional_size() == 32
+
+
+def test_spec_midflight_admission_parity():
+    """A request arriving later joins a freed lane; speculative windows
+    must stop at the arrival step (never drafting past a host decision)."""
+    lens = [16, 12, 14]
+    arrivals = [0, 0, 2]
+    spec, _ = _serve("spec", "tinyllama-1.1b", "fp16", lens, gen=8,
+                     n_slots=2, arrivals=arrivals, draft="self",
+                     draft_depth=3)
+    seq, _ = _serve("sequential", "tinyllama-1.1b", "fp16", lens, gen=8,
+                    arrivals=arrivals)
+    for rid in range(3):
+        np.testing.assert_array_equal(spec[rid].tokens, seq[rid].tokens)
+    assert spec[2].admitted_step > 0
+
+
+def test_spec_stream_records_two_floors_per_window():
+    """The honest §9 accounting: every draft and every verify dispatch is
+    a floor-charged DispatchRecord on the shared stream — a full window
+    shows exactly two, admission dispatches carry the drafter for free."""
+    _, sched = _serve("spec", "tinyllama-1.1b", "fp16", [16, 16], gen=10,
+                      n_slots=2, draft="self", draft_depth=4)
+    recs = sched.stream.records
+    _assert_record_invariants(sched.stream,
+                              window=sched.stream.max_in_flight)
+    draft_recs = [r for r in recs if r.key in sched._draft_keys]
+    verify_recs = [r for r in recs if r.key in sched._verify_keys]
+    assert len(verify_recs) == sched.n_windows == 2
+    assert len(draft_recs) == 2                # every window drafted
+    for r in draft_recs + verify_recs:
+        assert r.floor_s == V5E.dispatch_floor_s > 0.0
+        assert r.batch == 2                    # both lanes share the floor
+    # each window's draft submits strictly before its verify (the proposal
+    # tensor chains in as a live async value): pairing the i-th draft with
+    # the i-th verify in submission order pins the per-window ordering
+    draft_seqs = sorted(r.seq for r in draft_recs)
+    verify_seqs = sorted(r.seq for r in verify_recs)
+    assert all(d < v for d, v in zip(draft_seqs, verify_seqs)), \
+        (draft_seqs, verify_seqs)
+    # the drafter's admission work rode the target's dispatches: the
+    # per-request floor count matches the non-speculative admission shape
+    assert sum(1 for r in recs if r.key == "spec_admit_slot") == 2
+
+
+def test_draft_of_shrink_rule():
+    """The shrink rule: depth-pruned, width- and vocab-preserving, valid
+    for every family (hybrids keep one whole block-pattern period)."""
+    cfg = configs.get_smoke("tinyllama-1.1b")
+    dcfg = draft_of(cfg)
+    assert dcfg.n_layers == 1
+    assert dcfg.vocab == cfg.vocab and dcfg.d_model == cfg.d_model
+    assert dcfg.name.endswith("-draft")
+    assert dcfg.mtp_depth == 0
+    hyb = configs.get_smoke("recurrentgemma-9b")
+    dhyb = draft_of(hyb)
+    assert dhyb.n_layers == len(hyb.block_pattern)
+    enc = configs.get_smoke("whisper-small")
+    denc = draft_of(enc)
+    assert denc.n_encoder_layers == 1 and denc.encoder_len == enc.encoder_len
+    # MoE prunes to the dense path — dbrx has zero leading dense layers,
+    # so without the explicit rule its draft would still route experts
+    moe = configs.get_smoke("dbrx-132b")
+    dmoe = draft_of(moe)
+    assert not any(dmoe.layer_is_moe(i) for i in range(dmoe.n_layers))
+    # every registry config must shrink into a buildable draft
+    for arch in configs.ARCH_NAMES:
+        d = draft_of(configs.get_smoke(arch))
+        assert d.n_layers >= 1 and d.vocab > 0
+
+
+def test_spec_rejects_bad_setups():
+    cfg, model, params = _served_model("tinyllama-1.1b", "fp16")
+    with pytest.raises(ValueError, match="AsyncExecutionStream"):
+        SpeculativeSchedule(model, params, cfg, n_slots=1, max_len=16,
+                            stream=ExecutionStream(ProgramCache(),
+                                                   target=V5E))
+    with pytest.raises(ValueError, match="draft_depth"):
+        SpeculativeSchedule(model, params, cfg, n_slots=1, max_len=16,
+                            draft_depth=0)
+    with pytest.raises(ValueError, match="draft"):
+        SpeculativeSchedule(model, params, cfg, n_slots=1, max_len=16,
+                            draft="ngram")
+    import dataclasses as _dc
+    other = _dc.replace(cfg, vocab=cfg.vocab * 2)
+    bad = Drafter(model, params, other, kind="self")
+    with pytest.raises(ValueError, match="vocab"):
+        SpeculativeSchedule(model, params, cfg, n_slots=1, max_len=16,
+                            drafter=bad)
+
+
+def test_serve_cli_spec_schedule():
+    """`--schedule spec` end to end: warm-started second round, identical
+    greedy tokens to the continuous CLI run, spec stats surfaced."""
+    argv = ["--smoke", "--batch", "2", "--prompt-len", "8", "--gen", "6",
+            "--sampling", "greedy", "--requests", "2"]
+    cont = serve_mod.run(argv + ["--schedule", "continuous"])
+    out = serve_mod.run(argv + ["--schedule", "spec", "--draft", "self",
+                                "--draft-depth", "2"])
+    np.testing.assert_array_equal(out["tokens"], cont["tokens"])
+    assert out["cache_hits"] > 0
+    assert out["acceptance_rate"] == 1.0
+    assert out["n_windows"] > 0 and out["verify_dispatches"] > 0
+    shr = serve_mod.run(argv + ["--schedule", "spec", "--draft", "shrink",
+                                "--draft-depth", "2"])
+    np.testing.assert_array_equal(shr["tokens"], cont["tokens"])
+    assert shr["acceptance_rate"] < 1.0
