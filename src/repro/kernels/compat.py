@@ -141,6 +141,28 @@ def tree_path_str(path: Any) -> str:
 
 
 # ---------------------------------------------------------------------------
+# Scalar-prefetch grid specs
+# ---------------------------------------------------------------------------
+
+
+def prefetch_grid_spec(*, num_scalar_prefetch: int, grid, in_specs,
+                       out_specs, scratch_shapes=()):
+    """``pltpu.PrefetchScalarGridSpec`` under whichever Pallas ships it, or
+    ``None`` when the installed build has no scalar prefetch (callers fall
+    back to a gather-outside-the-kernel path). Scalar-prefetch arguments are
+    how a kernel's BlockSpec index maps read a page table before the body
+    runs — the paged-KV decode path resolves its arena blocks through this."""
+    if _pltpu is None:
+        return None
+    cls = getattr(_pltpu, "PrefetchScalarGridSpec", None)
+    if cls is None:
+        return None
+    return cls(num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+               in_specs=in_specs, out_specs=out_specs,
+               scratch_shapes=scratch_shapes)
+
+
+# ---------------------------------------------------------------------------
 # Named-axis helpers
 # ---------------------------------------------------------------------------
 

@@ -135,3 +135,143 @@ def decode_attention_ref(q, k_cache, v_cache, positions, current,
     w = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bkgc,bckd->bkgd", w, v_cache.astype(jnp.float32))
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: the KV cache lives in a shared block arena and each lane
+# reads it through a page table (launch/kv_pool.py builds both). One grid
+# step processes one page; the BlockSpec index maps resolve the arena block
+# from the scalar-prefetched table, so the gather happens in the DMA engine,
+# not as a materialized copy.
+# ---------------------------------------------------------------------------
+
+
+def _paged_kernel(bt_ref, q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, nb: int, scale: float, window,
+                  out_dtype):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (g, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = pos_ref[0]                                  # (bs,) written positions
+    cur = cur_ref[0, 0]
+    mapped = bt_ref[bi, ki] >= 0                      # -1 = unmapped page
+    valid = mapped & (pos >= 0) & (pos <= cur)
+    if window is not None:
+        valid &= (cur - pos) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)         # (g, bs)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (bs, d)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nb - 1)
+    def _store():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(out_dtype)
+
+
+def gather_pages(arena: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a per-lane view from a block arena: ``arena`` is
+    ``(N, bs, ...)``, ``block_tables`` is ``(B, nb)`` int32 with -1 for
+    unmapped pages (clamped to row 0; callers mask via positions/table).
+    Returns ``(B, nb*bs, ...)`` — the monolithic-slab layout."""
+    n, bs = arena.shape[:2]
+    b, nb = block_tables.shape
+    g = jnp.take(arena, jnp.maximum(block_tables, 0).reshape(-1), axis=0)
+    return g.reshape((b, nb * bs) + arena.shape[2:])
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale"))
+def paged_decode_attention(
+    q: jnp.ndarray,            # (B, H, d) one query row per sequence
+    k_arena: jnp.ndarray,      # (N, bs, KV, d) shared block arena
+    v_arena: jnp.ndarray,      # (N, bs, KV, d)
+    pos_arena: jnp.ndarray,    # (N, bs) written absolute position per slot
+    block_tables: jnp.ndarray,  # (B, nb) arena block per lane page; -1 empty
+    current: jnp.ndarray,      # (B,) current decode position
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    n, bs, kvh, _ = k_arena.shape
+    nb = block_tables.shape[1]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, kvh, g, d)
+    bt = block_tables.astype(jnp.int32)
+    cur = current.reshape(b, 1).astype(jnp.int32)
+
+    grid_spec = compat.prefetch_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki, t: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bi, hi, ki, t: (jnp.maximum(t[bi, ki], 0),
+                                                0, hi, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bi, hi, ki, t: (jnp.maximum(t[bi, ki], 0),
+                                                0, hi, 0)),
+            pl.BlockSpec((1, bs),
+                         lambda bi, hi, ki, t: (jnp.maximum(t[bi, ki], 0), 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ki, t: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, hi, ki, t: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    if grid_spec is None:       # no scalar prefetch in this Pallas: gather
+        # the pages outside the kernel and run the monolithic-slab path with
+        # one KV chunk per page — identical accumulation order, so the two
+        # paths stay bit-identical in interpret mode
+        k_cache = gather_pages(k_arena, bt)
+        v_cache = gather_pages(v_arena, bt)
+        pos = jnp.where(
+            jnp.repeat(bt >= 0, bs, axis=1), gather_pages(pos_arena, bt), -1)
+        return decode_attention(q, k_cache, v_cache, pos, current,
+                                window=window, bk=bs, scale=scale)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, nb=nb, scale=scale, window=window,
+                          out_dtype=q.dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        interpret=interpret_mode(),
+        **compat.pallas_call_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(bt, qg, k_arena, v_arena, pos_arena, cur)
+    return out.reshape(b, h, d)
+
+
+def paged_decode_attention_ref(q, k_arena, v_arena, pos_arena, block_tables,
+                               current, *, window=None, scale=None):
+    """jnp oracle: materialize the page-table gather, then the monolithic
+    oracle. Unmapped pages (-1) read as empty slots."""
+    bs = k_arena.shape[1]
+    bt = block_tables.astype(jnp.int32)
+    k_cache = gather_pages(k_arena, bt)
+    v_cache = gather_pages(v_arena, bt)
+    pos = jnp.where(
+        jnp.repeat(bt >= 0, bs, axis=1), gather_pages(pos_arena, bt), -1)
+    return decode_attention_ref(q, k_cache, v_cache, pos, current,
+                                window=window, scale=scale)

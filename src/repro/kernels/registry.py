@@ -363,6 +363,73 @@ def _register_decode() -> None:
 
 
 # ---------------------------------------------------------------------------
+# paged_decode_attention — decode against a block arena through a page table
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_inputs(case: ShapeCase, dtype, rng) -> dict:
+    b, h, kvh, n, bs, nb, d, length = case.dims
+    # per-lane written lengths: lane 0 carries the full prefix, later lanes
+    # progressively shorter (ragged page tables, partial last pages); the
+    # empty_lane case zeroes the last lane — a K=0 page table of all -1
+    lens = [max(0, length - i * (length // max(b, 1))) for i in range(b)]
+    if case.name == "empty_lane":
+        lens[-1] = 0
+    pos_arena = np.full((n, bs), -1, np.int32)
+    tables = np.full((b, nb), -1, np.int32)
+    perm = rng.permutation(n)          # scattered arena rows: a real gather
+    nxt = 0
+    for i in range(b):
+        for j in range(-(-lens[i] // bs)):
+            row = int(perm[nxt])
+            nxt += 1
+            tables[i, j] = row
+            pp = j * bs + np.arange(bs)
+            pos_arena[row] = np.where(pp < lens[i], pp, -1)
+    return {"q": _normal(rng, (b, h, d), dtype),
+            "k_arena": _normal(rng, (n, bs, kvh, d), dtype),
+            "v_arena": _normal(rng, (n, bs, kvh, d), dtype),
+            "pos_arena": jnp.asarray(pos_arena),
+            "block_tables": jnp.asarray(tables),
+            "current": jnp.asarray(np.maximum(np.asarray(lens) - 1, 0),
+                                   jnp.int32)}
+
+
+def _register_paged_decode() -> None:
+    from repro.kernels.flash.decode_attention import (
+        paged_decode_attention, paged_decode_attention_ref)
+
+    register(KernelSpec(
+        name="paged_decode_attention",
+        # same op-by-device cell as decode_attention: the page-table block
+        # resolve is a gather, so targets without native gather (H13/M1)
+        # fall back to the materializing oracle
+        capability_op="gather",
+        dtypes=(jnp.float32, jnp.bfloat16),
+        cases=(
+            # dims = (B, H, KVH, N arena blocks, bs, nb pages/lane, d, length)
+            ShapeCase("gqa", (2, 8, 2, 16, 8, 6, 64, 41)),
+            ShapeCase("mha", (1, 4, 4, 8, 16, 4, 32, 64)),
+            ShapeCase("ragged_pages", (3, 4, 2, 24, 8, 5, 64, 27), edge=True),
+            ShapeCase("empty_lane", (2, 4, 1, 12, 8, 4, 16, 9), edge=True),
+        ),
+        make_inputs=_paged_decode_inputs,
+        run_kernel=lambda i: paged_decode_attention(
+            i["q"], i["k_arena"], i["v_arena"], i["pos_arena"],
+            i["block_tables"], i["current"]),
+        run_oracle=lambda i: paged_decode_attention_ref(
+            i["q"], i["k_arena"], i["v_arena"], i["pos_arena"],
+            i["block_tables"], i["current"]),
+        tol=_flash_tol,
+        cost=lambda c, dt: OpCost(
+            f"paged_decode_attention/{c.name}",
+            4.0 * c.dims[0] * c.dims[1] * c.dims[5] * c.dims[4] * c.dims[6],
+            float(_itemsize(dt)) * 2.0 * c.dims[0] * c.dims[5] * c.dims[4]
+            * c.dims[2] * c.dims[6] + 4.0 * c.dims[0] * c.dims[5]),
+    ))
+
+
+# ---------------------------------------------------------------------------
 # act_lut — 33-knot piecewise-linear activation evaluation
 # ---------------------------------------------------------------------------
 
@@ -466,6 +533,6 @@ def _register_specdec() -> None:
 
 
 for _reg in (_register_anemm, _register_palette, _register_sparse,
-             _register_flash, _register_decode, _register_act_lut,
-             _register_specdec):
+             _register_flash, _register_decode, _register_paged_decode,
+             _register_act_lut, _register_specdec):
     _reg()

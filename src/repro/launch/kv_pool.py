@@ -1,0 +1,519 @@
+"""Block-paged KV pool with cross-request prefix sharing (paper §9).
+
+The dispatch-floor model says every command the engine executes pays a fixed
+~t0 regardless of useful work, so the cheapest prefill is the one that never
+dispatches: chat-shaped traffic (shared system prompts, few-shot templates,
+multi-turn) re-computes identical prefixes from token 0 on every admission.
+This module turns the per-lane monolithic cache slab into a shared,
+block-paged pool so a resident prefix is *reused* instead of re-prefilled:
+
+  * **block arena** — a fixed set of `n_blocks` rows per paged cache leaf,
+    each row holding `block_size` consecutive token positions of one
+    sequence's KV state (`(n_blocks, stack, block_size, ...)` per leaf).
+  * **prefix trie on token-block hashes** — block k of a prompt is keyed by
+    ``sha256(parent_key || tokens[k*bs:(k+1)*bs])``, so a key identifies the
+    *entire* prefix up to its block, not just the block's own tokens (KV at
+    position p depends on every token <= p). Matching a prompt walks the
+    chain; the trie is the set of resident chains.
+  * **per-lane page tables** — an owner (decode lane / request) holds an
+    ordered list of chain keys; `acquire`/`release` move block refcounts.
+  * **refcounts + copy-on-write** — a block's refcount is its lane
+    references plus its resident children. `write` diverges an owner's
+    chain at a block: shared blocks are copied to a fresh arena row, never
+    mutated in place.
+  * **LRU eviction** — refcount-0 blocks stay resident (that is the cache)
+    on an LRU list; allocation evicts the oldest only when the free list is
+    empty. A referenced block is never evicted or reallocated.
+  * **anchors** — resuming decode at position M needs more than the KV
+    rows: recurrent state (SSM/RG-LRU), conv tails and ring-buffer window
+    leaves do not decompose into position blocks. The final block of each
+    inserted prefill chain therefore carries an *anchor*: a snapshot of
+    every non-paged cache leaf at exactly that boundary. A prefix hit lands
+    on the longest matched chain that ends at an anchor, so the assembled
+    lane state is complete for every architecture in the registry —
+    attention, MLA, hybrid SSM and ring-window alike.
+
+Cross-prefill sharing is bit-safe: KV at position p is a deterministic
+function of tokens[0..p] only (causal masking), so a block produced by a
+bucket-8 prefill is bit-identical to the same positions of a bucket-16
+prefill of the same prefix — the serve-scheduler parity suite locks this.
+
+The scheduler composes the pool with its admission machinery
+(`launch/scheduler.py`): a hit replaces the prefill + admit dispatches with
+one gather-and-merge dispatch; the matched blocks' prefill work is skipped
+entirely. The decode-side read path for an arena-resident lane is
+`kernels/flash/decode_attention.paged_decode_attention`, conformance-swept
+against its oracle via the registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import compat
+
+# Cache leaves with a KV time axis, merged/paged by name: the single axis on
+# which a prefill cache may be shorter than the decode buffer. Everything
+# else (recurrent SSM/RG-LRU state, conv tails) must match exactly or fail
+# loud. (Historically defined in launch/scheduler.py, which re-exports it.)
+TIME_MERGE_LEAVES = frozenset({"k", "v", "pos", "c_kv", "k_rope"})
+
+#: time axis of stacked serving cache leaves: (stack, batch, time, ...)
+_TIME_AXIS = 2
+
+
+def _leaf_name(loc: str) -> str:
+    return loc.rsplit("/", 1)[-1]
+
+
+@dataclasses.dataclass
+class _Block:
+    """One resident block: a trie node plus its arena row."""
+
+    key: str                      # chain hash (identifies the whole prefix)
+    parent: str | None
+    bid: int                      # arena row
+    tokens: np.ndarray            # this block's own tokens (audit/debug)
+    lane_refs: int = 0            # owners whose page table includes this key
+    children: int = 0             # resident child nodes
+    anchored: bool = False        # a prefill ended exactly at this boundary
+    anchor: dict | None = None    # non-paged leaf snapshot at the boundary
+
+    @property
+    def refcount(self) -> int:
+        return self.lane_refs + self.children
+
+
+class PagedKVPool:
+    """Fixed-size block arena + prefix trie + per-lane page tables.
+
+    The metadata layer (match/acquire/release/fork/write/insert and the
+    refcount/LRU bookkeeping) runs host-side and is payload-agnostic — the
+    hypothesis suite in tests/test_kv_pool.py drives it unbound. `bind`
+    attaches the device arenas for a concrete cache pytree; the traceable
+    helpers (`insert_blocks`, `assemble_prefix`) then run *inside* the
+    scheduler's jitted admission programs, so pool traffic is dispatched —
+    and floor-charged — through the ExecutionStream like everything else.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int) -> None:
+        if n_blocks < 1:
+            raise ValueError(f"pool needs n_blocks >= 1, got {n_blocks}")
+        if block_size < 1:
+            raise ValueError(f"pool needs block_size >= 1, got {block_size}")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free: list[int] = list(range(n_blocks - 1, -1, -1))
+        self._nodes: dict[str, _Block] = {}
+        self._lru: OrderedDict[str, None] = OrderedDict()
+        self._tables: dict[Any, list[str]] = {}
+        self.stats: dict[str, int] = {
+            "hits": 0, "misses": 0, "hit_tokens": 0, "inserted_blocks": 0,
+            "evictions": 0, "cow_copies": 0,
+        }
+        # device side (None until bind)
+        self.arenas: dict[str, jnp.ndarray] | None = None
+        self._paged_paths: set[str] = set()
+        self._anchor_paths: set[str] = set()
+        self._leaf_paths: list[str] = []
+
+    # -- chain hashing ------------------------------------------------------
+    def _key(self, parent: str | None, block_tokens: np.ndarray) -> str:
+        h = hashlib.sha256()
+        h.update(b"root" if parent is None else parent.encode())
+        h.update(np.asarray(block_tokens, np.int32).tobytes())
+        return h.hexdigest()
+
+    def _blocks_of(self, tokens) -> list[np.ndarray]:
+        t = np.asarray(tokens, np.int32).reshape(-1)
+        bs = self.block_size
+        return [t[i * bs:(i + 1) * bs] for i in range(t.size // bs)]
+
+    # -- refcounts / LRU ----------------------------------------------------
+    def _ref(self, key: str) -> None:
+        node = self._nodes[key]
+        node.lane_refs += 1
+        self._lru.pop(key, None)
+
+    def _unref(self, key: str) -> bool:
+        """Drop one lane reference; True when the block became free
+        (refcount 0, parked on the LRU list but still resident)."""
+        node = self._nodes[key]
+        if node.lane_refs <= 0:
+            raise AssertionError(f"block {key[:8]}: unref below zero")
+        node.lane_refs -= 1
+        if node.refcount == 0:
+            self._lru[key] = None
+            return True
+        return False
+
+    def _alloc_bid(self) -> int | None:
+        """A free arena row, evicting the LRU refcount-0 block if needed.
+        None when every block is referenced (pool full, caller skips)."""
+        if self._free:
+            return self._free.pop()
+        while self._lru:
+            key, _ = self._lru.popitem(last=False)
+            node = self._nodes.get(key)
+            if node is None or node.refcount:
+                continue            # stale LRU entry
+            self._evict(node)
+            return self._free.pop()
+        return None
+
+    def _evict(self, node: _Block) -> None:
+        del self._nodes[node.key]
+        self._free.append(node.bid)
+        self.stats["evictions"] += 1
+        if node.parent is not None:
+            parent = self._nodes.get(node.parent)
+            if parent is not None:
+                parent.children -= 1
+                if parent.refcount == 0:
+                    self._lru[parent.key] = None
+
+    # -- trie matching ------------------------------------------------------
+    def match(self, tokens) -> list[str]:
+        """Chain keys of the longest resident whole-block prefix."""
+        keys: list[str] = []
+        parent = None
+        for blk in self._blocks_of(tokens):
+            key = self._key(parent, blk)
+            if key not in self._nodes:
+                break
+            keys.append(key)
+            parent = key
+        return keys
+
+    def anchored_match(self, tokens, *, limit: int | None = None) -> list[str]:
+        """Longest resident chain that ends at an *anchored* boundary,
+        covering at most `limit` tokens — the prefix a lane can actually
+        resume from (the anchor carries the non-paged state at M)."""
+        keys = self.match(tokens)
+        if limit is not None:
+            keys = keys[: max(limit, 0) // self.block_size]
+        while keys and not self._nodes[keys[-1]].anchored:
+            keys.pop()
+        return keys
+
+    # -- page tables --------------------------------------------------------
+    def acquire(self, owner, keys: list[str]) -> int:
+        """Reference a matched chain as `owner`'s page table. Returns the
+        token length covered."""
+        if owner in self._tables:
+            raise ValueError(f"pool owner {owner!r} already holds a table")
+        for key in keys:
+            if key not in self._nodes:
+                raise KeyError(f"block {key[:8]} not resident")
+        for key in keys:
+            self._ref(key)
+        self._tables[owner] = list(keys)
+        return len(keys) * self.block_size
+
+    def release(self, owner) -> list[str]:
+        """Drop `owner`'s page table. Returns exactly the keys that became
+        free (refcount 0) — the blocks the lane exclusively owned."""
+        keys = self._tables.pop(owner, [])
+        return [k for k in keys if self._unref(k)]
+
+    def fork(self, owner, new_owner) -> None:
+        """Share `owner`'s page table with `new_owner` (both reference every
+        block; divergence later goes through `write`'s copy-on-write)."""
+        if new_owner in self._tables:
+            raise ValueError(f"pool owner {new_owner!r} already holds a table")
+        keys = list(self._tables[owner])
+        for key in keys:
+            self._ref(key)
+        self._tables[new_owner] = keys
+
+    def write(self, owner, idx: int, block_tokens) -> str | None:
+        """Diverge `owner`'s chain at block `idx` with new content: the
+        copy-on-write point. A block shared with anyone else (other lane
+        refs, or resident children) is never mutated or aliased — the new
+        content lands on a fresh arena row under its own chain key, and the
+        owner's stale suffix is released. Returns the new key, or None when
+        the pool is full."""
+        table = self._tables[owner]
+        if not 0 <= idx < len(table):
+            raise IndexError(f"owner {owner!r} has {len(table)} blocks, "
+                             f"cannot write block {idx}")
+        block_tokens = np.asarray(block_tokens, np.int32).reshape(-1)
+        if block_tokens.size != self.block_size:
+            raise ValueError(f"write wants exactly one block "
+                             f"({self.block_size} tokens), "
+                             f"got {block_tokens.size}")
+        old = self._nodes[table[idx]]
+        parent = table[idx - 1] if idx else None
+        new_key = self._key(parent, block_tokens)
+        if new_key == old.key:
+            # content-identical write: the chain already says this
+            for key in table[idx + 1:]:
+                self._unref(key)
+            self._tables[owner] = table[: idx + 1]
+            return new_key
+        old_bid = old.bid
+        shared = old.lane_refs > 1 or old.children > 0
+        for key in table[idx:]:
+            self._unref(key)
+        node = self._nodes.get(new_key)
+        if node is None:
+            bid = self._alloc_bid()
+            if bid is None:
+                self._tables[owner] = table[:idx]
+                return None
+            if shared and bid == old_bid:
+                raise AssertionError(
+                    f"copy-on-write aliased shared block {old.key[:8]}")
+            node = _Block(key=new_key, parent=parent, bid=bid,
+                          tokens=block_tokens.copy())
+            self._nodes[new_key] = node
+            if parent is not None:
+                pnode = self._nodes[parent]
+                pnode.children += 1
+                self._lru.pop(parent, None)
+            self.stats["cow_copies"] += 1
+            if self.arenas is not None:
+                # divergence copies the old row's payload to the new row;
+                # the caller overwrites the diverged positions afterwards
+                self.arenas = {loc: ar.at[bid].set(ar[old_bid])
+                               for loc, ar in self.arenas.items()}
+        self._ref(node.key)
+        self._tables[owner] = table[:idx] + [node.key]
+        return node.key
+
+    # -- insertion (the cold path) ------------------------------------------
+    def reserve(self, tokens) -> tuple[list[str], list[int], int]:
+        """Metadata insert for a prompt prefix: walk/extend the chain for
+        every whole block of `tokens`, allocating arena rows for the blocks
+        not already resident. Returns (chain keys, new bids, first new block
+        index). Stops early when the pool is full — a partial chain is still
+        shareable, it just cannot anchor."""
+        keys: list[str] = []
+        new_bids: list[int] = []
+        first_new = -1
+        parent = None
+        for i, blk in enumerate(self._blocks_of(tokens)):
+            key = self._key(parent, blk)
+            node = self._nodes.get(key)
+            if node is None:
+                # take the parent's child reference BEFORE allocating: the
+                # allocation may evict, and the chain built so far (fresh
+                # refcount-0 blocks included) must not be eviction fodder
+                if parent is not None:
+                    pnode = self._nodes[parent]
+                    pnode.children += 1
+                    self._lru.pop(parent, None)
+                bid = self._alloc_bid()
+                if bid is None:
+                    if parent is not None:
+                        pnode.children -= 1
+                        if pnode.refcount == 0:
+                            self._lru[pnode.key] = None
+                    break
+                node = _Block(key=key, parent=parent, bid=bid,
+                              tokens=blk.copy())
+                self._nodes[key] = node
+                self._lru[key] = None      # refcount 0: resident, evictable
+                self.stats["inserted_blocks"] += 1
+                new_bids.append(bid)
+                if first_new < 0:
+                    first_new = i
+            keys.append(key)
+            parent = key
+        return keys, new_bids, first_new
+
+    def set_anchor(self, key: str, anchor: dict | None) -> None:
+        """Mark `key`'s boundary as resumable, attaching the non-paged leaf
+        snapshot taken at exactly that prefix length."""
+        node = self._nodes[key]
+        node.anchored = True
+        node.anchor = anchor
+
+    def anchor_of(self, key: str) -> dict | None:
+        return self._nodes[key].anchor
+
+    def bids_of(self, keys: list[str]) -> list[int]:
+        return [self._nodes[k].bid for k in keys]
+
+    # -- introspection (tests / audit) --------------------------------------
+    def refcount(self, key: str) -> int:
+        return self._nodes[key].refcount
+
+    def resident(self) -> set[str]:
+        return set(self._nodes)
+
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def table(self, owner) -> list[str]:
+        return list(self._tables.get(owner, []))
+
+    def owners(self) -> set:
+        return set(self._tables)
+
+    def audit(self) -> None:
+        """Check every structural invariant; raises AssertionError with the
+        first violation. The hypothesis suite calls this after every op."""
+        lane_refs: dict[str, int] = {}
+        for owner, keys in self._tables.items():
+            parent = None
+            for key in keys:
+                node = self._nodes.get(key)
+                assert node is not None, \
+                    f"owner {owner!r} references evicted block {key[:8]}"
+                assert node.parent == parent, \
+                    f"owner {owner!r} table breaks the chain at {key[:8]}"
+                lane_refs[key] = lane_refs.get(key, 0) + 1
+                parent = key
+        children: dict[str, int] = {}
+        for node in self._nodes.values():
+            if node.parent is not None:
+                assert node.parent in self._nodes, \
+                    f"block {node.key[:8]} orphaned (parent evicted)"
+                children[node.parent] = children.get(node.parent, 0) + 1
+        for node in self._nodes.values():
+            assert node.lane_refs == lane_refs.get(node.key, 0), \
+                (f"block {node.key[:8]}: lane_refs {node.lane_refs} != live "
+                 f"page-table references {lane_refs.get(node.key, 0)}")
+            assert node.children == children.get(node.key, 0), \
+                (f"block {node.key[:8]}: children {node.children} != "
+                 f"resident child count {children.get(node.key, 0)}")
+        bids = [n.bid for n in self._nodes.values()]
+        assert len(bids) == len(set(bids)), "two resident blocks share a row"
+        assert not set(bids) & set(self._free), \
+            "a resident block's row is on the free list"
+        assert len(bids) + len(self._free) == self.n_blocks, \
+            "arena rows leaked"
+        for key in self._lru:
+            node = self._nodes.get(key)
+            assert node is None or node.refcount == 0, \
+                f"referenced block {key[:8]} is on the eviction list"
+        for node in self._nodes.values():
+            if node.refcount == 0:
+                assert node.key in self._lru, \
+                    f"free block {node.key[:8]} missing from the LRU list"
+
+    # -- device arenas ------------------------------------------------------
+    def bind(self, dec_caches, *, max_len: int) -> None:
+        """Attach arenas for a concrete decode-cache pytree. A leaf pages
+        iff it is a named KV-time leaf whose time extent equals `max_len` —
+        ring-buffer window leaves (extent = window < max_len) wrap by
+        position and do not decompose into blocks, so they ride the anchor
+        instead, as does every recurrent/conv leaf."""
+        if self.arenas is not None:
+            return
+        leaves, _ = compat.tree_flatten_with_path(dec_caches)
+        arenas: dict[str, jnp.ndarray] = {}
+        anchor_paths: set[str] = set()
+        paths: list[str] = []
+        for path, leaf in leaves:
+            loc = compat.tree_path_str(path)
+            paths.append(loc)
+            if (_leaf_name(loc) in TIME_MERGE_LEAVES
+                    and leaf.ndim > _TIME_AXIS
+                    and leaf.shape[_TIME_AXIS] == max_len):
+                row_shape = ((self.n_blocks, leaf.shape[0], self.block_size)
+                             + leaf.shape[_TIME_AXIS + 1:])
+                arenas[loc] = jnp.zeros(row_shape, leaf.dtype)
+            else:
+                anchor_paths.add(loc)
+        self.arenas = arenas
+        self._paged_paths = set(arenas)
+        self._anchor_paths = anchor_paths
+        self._leaf_paths = paths
+
+    def validate_prefill(self, pf_caches, n_tokens: int) -> None:
+        """Loud-failure gate before arena writes: every paged leaf of a
+        prefill cache must be batch-1, rank-matched and exactly `n_tokens`
+        long on the time axis; any page-table/arena mismatch raises with the
+        tree path rather than silently caching truncated state."""
+        leaves, _ = compat.tree_flatten_with_path(pf_caches)
+        seen = []
+        for path, leaf in leaves:
+            loc = compat.tree_path_str(path)
+            seen.append(loc)
+            if loc not in self._paged_paths:
+                continue
+            arena = self.arenas[loc]
+            # same rank: the arena drops the batch axis but adds the block
+            # axis ((n_blocks, stack, bs, ...) vs (stack, 1, T, ...))
+            if leaf.ndim != arena.ndim:
+                raise ValueError(
+                    f"cache leaf {loc!r}: prefill rank {leaf.ndim} "
+                    f"{leaf.shape} cannot page into arena rank "
+                    f"{arena.ndim} {arena.shape}")
+            if leaf.shape[1] != 1:
+                raise ValueError(
+                    f"cache leaf {loc!r}: pool insert wants a batch-1 "
+                    f"prefill cache, got batch {leaf.shape[1]}")
+            if leaf.shape[_TIME_AXIS] != n_tokens:
+                raise ValueError(
+                    f"cache leaf {loc!r}: prefill time extent "
+                    f"{leaf.shape[_TIME_AXIS]} != inserted prefix "
+                    f"{n_tokens}; off-axis state would be dropped")
+            if leaf.shape[_TIME_AXIS + 1:] != arena.shape[_TIME_AXIS + 1:]:
+                raise ValueError(
+                    f"cache leaf {loc!r}: prefill tail {leaf.shape} does "
+                    f"not match arena row {arena.shape}")
+        if set(seen) != set(self._leaf_paths):
+            missing = set(self._leaf_paths) ^ set(seen)
+            raise ValueError(
+                f"prefill cache structure diverges from the bound decode "
+                f"cache at {sorted(missing)}")
+
+    def anchor_leaves(self, pf_caches) -> dict[str, jnp.ndarray]:
+        """Snapshot every non-paged leaf of a prefill cache (recurrent
+        state, conv tails, ring-window KV) — the anchor payload."""
+        leaves, _ = compat.tree_flatten_with_path(pf_caches)
+        return {compat.tree_path_str(p): leaf for p, leaf in leaves
+                if compat.tree_path_str(p) in self._anchor_paths}
+
+    # -- traceable bodies (run inside the scheduler's jitted dispatches) ----
+    def insert_blocks(self, arenas, pf_caches, bids, start: int):
+        """Write blocks [start, start+len(bids)) of a prefill cache into the
+        arena rows `bids`. Traceable; `start` must be static."""
+        leaves, _ = compat.tree_flatten_with_path(pf_caches)
+        bs = self.block_size
+        m = bids.shape[0]
+        out = dict(arenas)
+        for path, leaf in leaves:
+            loc = compat.tree_path_str(path)
+            if loc not in self._paged_paths:
+                continue
+            row = leaf[:, 0]                       # (stack, T, ...)
+            sl = jax.lax.dynamic_slice_in_dim(row, start * bs, m * bs, axis=1)
+            sl = sl.reshape((row.shape[0], m, bs) + row.shape[2:])
+            sl = jnp.moveaxis(sl, 1, 0)            # (m, stack, bs, ...)
+            out[loc] = arenas[loc].at[bids].set(sl.astype(arenas[loc].dtype))
+        return out
+
+    def assemble_prefix(self, dec_caches, arenas, bids, anchor):
+        """Gather `bids` through the page table into a batch-1 prefill-like
+        pytree (paged leaves from the arena, the rest from the anchor) with
+        the decode cache's structure, ready for `_admit_into_slot_impl`.
+        Traceable: this *is* the prefix-hit admission body."""
+        leaves, treedef = compat.tree_flatten_with_path(dec_caches)
+        bs = self.block_size
+        m = bids.shape[0]
+        out = []
+        for path, _leaf in leaves:
+            loc = compat.tree_path_str(path)
+            if loc in self._paged_paths:
+                g = jnp.take(arenas[loc], bids, axis=0)  # (m, stack, bs, ...)
+                g = jnp.moveaxis(g, 0, 1)                # (stack, m, bs, ...)
+                g = g.reshape((g.shape[0], m * bs) + g.shape[3:])
+                out.append(g[:, None])                   # (stack, 1, M, ...)
+            else:
+                if loc not in anchor:
+                    raise ValueError(
+                        f"cache leaf {loc!r}: prefix anchor is missing the "
+                        f"non-paged leaf; lane state would be dropped")
+                out.append(anchor[loc])
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -63,11 +63,9 @@ from repro.core import hal
 from repro.core.dispatch import (AsyncExecutionStream, ExecutionStream,
                                  ProgramCache)
 from repro.kernels import compat
-
-# Cache leaves with a KV time axis, merged by name: the single axis on which
-# a prefill cache may be shorter than the decode buffer. Everything else
-# (recurrent SSM/RG-LRU state, conv tails) must match exactly or fail loud.
-TIME_MERGE_LEAVES = frozenset({"k", "v", "pos", "c_kv", "k_rope"})
+# TIME_MERGE_LEAVES historically lived here; the pool module owns the leaf
+# taxonomy now and this re-export keeps existing imports working.
+from repro.launch.kv_pool import PagedKVPool, TIME_MERGE_LEAVES  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
@@ -425,7 +423,8 @@ class ContinuousSchedule(_SchedulerBase):
     name = "continuous"
 
     def __init__(self, model, params, cfg, *, n_slots: int, max_len: int,
-                 **kw) -> None:
+                 prefix_cache: bool = False, prefix_blocks: int = 64,
+                 prefix_block_size: int = 8, **kw) -> None:
         super().__init__(model, params, cfg, max_len=max_len, **kw)
         if n_slots < 1:
             raise ValueError(f"continuous schedule needs n_slots >= 1, "
@@ -433,6 +432,100 @@ class ContinuousSchedule(_SchedulerBase):
         self.n_slots = n_slots
         self.slots = [_Slot() for _ in range(n_slots)]
         self.caches = None        # allocated lazily on first run
+        self.pool: PagedKVPool | None = None
+        if prefix_cache:
+            if cfg.family == "encdec":
+                raise ValueError(
+                    "prefix cache cannot serve encdec: the cross-attention "
+                    "cache is built from per-request frames, so token-hash "
+                    "block sharing would alias state across requests")
+            self.pool = PagedKVPool(prefix_blocks, prefix_block_size)
+            pool = self.pool
+
+            # both admission-side pool programs are jitted outside the
+            # ProgramCache, like `_admit_into_slot` (the compile bound stays
+            # `#buckets x {prefill, decode}`), but dispatch on the stream so
+            # every pool touch is floor-charged like any other command
+            @partial(jax.jit, donate_argnums=(0,))
+            def _prefix_admit(dec_caches, arenas, bids, anchor, slot):
+                pf = pool.assemble_prefix(dec_caches, arenas, bids, anchor)
+                return _admit_into_slot_impl(dec_caches, pf, slot)
+
+            @partial(jax.jit, donate_argnums=(0,), static_argnums=(3,))
+            def _pool_insert(arenas, pf_caches, bids, start):
+                return pool.insert_blocks(arenas, pf_caches, bids, start)
+
+            self._prefix_admit_jit = _prefix_admit
+            self._pool_insert_jit = _pool_insert
+
+    def _ensure_caches(self) -> None:
+        if self.caches is None:
+            self.caches = self.model.init_cache(self.n_slots, self.max_len)
+        if self.pool is not None and self.pool.arenas is None:
+            self.pool.bind(self.caches, max_len=self.max_len)
+
+    # -- prefix-cache admission ---------------------------------------------
+    def _prefix_hit_admit(self, req: Request, slot: _Slot, sidx,
+                          bucket: int) -> bool:
+        """Admit from resident blocks when the prompt's longest anchored
+        resident prefix reaches at least the bucket a cold admission would
+        prefill: ONE fused gather+merge dispatch replaces the prefill +
+        lane-write pair, and the matched blocks' prefill work is never
+        dispatched at all. The matched length M is capped at L-1 so at least
+        one prompt token always remains to teacher-force the first decode
+        step — hit admissions never need logits, and token streams stay
+        bit-identical to cold admissions (sampling is keyed per (rid,
+        position), and positions M..L-1 catch up through the shared decode
+        program exactly as a bucket-M cold admission would)."""
+        pool = self.pool
+        if pool is None or pool.arenas is None:
+            return False
+        L = req.prompt.size
+        keys = pool.anchored_match(req.prompt, limit=L - 1)
+        M = len(keys) * pool.block_size
+        if not keys or M < max(bucket, 1):
+            return False
+        bids = jnp.asarray(pool.bids_of(keys), jnp.int32)
+        anchor = pool.anchor_of(keys[-1])
+        self.stream.encode_operation(
+            self._prefix_admit_jit,
+            (self.caches, pool.arenas, bids, anchor, sidx),
+            "prefix_admit", batch=1)
+        self.caches = self.stream.execute_sync()[0]
+        pool.acquire(req.rid, keys)
+        pool.stats["hits"] += 1
+        pool.stats["hit_tokens"] += M
+        slot.next_pos = M
+        slot.next_tok = int(req.prompt[M])
+        return True
+
+    def _pool_cold_insert(self, req: Request, bucket: int, pf_caches) -> None:
+        """Cold-path residency: reserve arena rows for the prefilled whole
+        blocks and write them with one extra dispatch (floor-charged — the
+        honest cost of caching); the chain end anchors the non-paged leaves
+        (recurrent state, conv tails, ring-window KV) so later admissions
+        can resume from exactly this boundary."""
+        pool = self.pool
+        pool.stats["misses"] += 1
+        if bucket < pool.block_size:
+            return
+        keys, new_bids, first_new = pool.reserve(req.prompt[:bucket])
+        if new_bids:
+            pool.validate_prefill(pf_caches, bucket)
+            bids = jnp.asarray(new_bids, jnp.int32)
+            self.stream.encode_operation(
+                self._pool_insert_jit,
+                (pool.arenas, pf_caches, bids, first_new),
+                "pool_insert", batch=1)
+            pool.arenas = self.stream.execute_sync()[0]
+        if keys:
+            if len(keys) * pool.block_size == bucket:
+                pool.set_anchor(keys[-1], pool.anchor_leaves(pf_caches))
+            pool.acquire(req.rid, keys)
+
+    def _release_lane(self, req: Request) -> None:
+        if self.pool is not None:
+            self.pool.release(req.rid)
 
     # -- admission ----------------------------------------------------------
     def _admit(self, slot_idx: int, req: Request, step: int) -> None:
@@ -444,10 +537,14 @@ class ContinuousSchedule(_SchedulerBase):
         sidx = jnp.asarray(slot_idx, jnp.int32)
         # lane writes dispatch on the stream too: the floor ledger must
         # charge every real dispatch, admissions included
-        if bucket == 0:
+        if self._prefix_hit_admit(req, slot, sidx, bucket):
+            pass                  # admitted from resident blocks
+        elif bucket == 0:
             self.stream.encode_operation(_reset_slot, (self.caches, sidx),
                                          "reset_slot", batch=1)
             self.caches = self.stream.execute_sync()[0]
+            if self.pool is not None:
+                self.pool.stats["misses"] += 1
             slot.next_pos, slot.next_tok = 0, int(req.prompt[0])
         else:
             batch = self._prefill_batch(req.prompt[None, :bucket], req.frames)
@@ -455,6 +552,8 @@ class ContinuousSchedule(_SchedulerBase):
             self.stream.encode_operation(prefill, (self.params, batch),
                                          pkey, batch=1)
             pf_caches, logits = self.stream.execute_sync()[0]
+            if self.pool is not None:
+                self._pool_cold_insert(req, bucket, pf_caches)
             self.stream.encode_operation(
                 _admit_into_slot, (self.caches, pf_caches, sidx),
                 "admit_slot", batch=1)
@@ -489,6 +588,7 @@ class ContinuousSchedule(_SchedulerBase):
                 np.asarray(slot.generated[:req.max_new_tokens], np.int32),
                 bucket=slot.bucket, admitted_step=slot.admitted_step,
                 finished_step=step))
+            self._release_lane(req)
             slot.req = None
             slot.generated = []
 
@@ -497,8 +597,7 @@ class ContinuousSchedule(_SchedulerBase):
         for r in requests:
             self._check(r)
         queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        if self.caches is None:
-            self.caches = self.model.init_cache(self.n_slots, self.max_len)
+        self._ensure_caches()
         results: list[RequestResult] = []
         step = 0
         while queue or any(s.active for s in self.slots):
@@ -551,8 +650,17 @@ class ContinuousSchedule(_SchedulerBase):
             np.asarray(slot.generated[:req.max_new_tokens], np.int32),
             bucket=slot.bucket, admitted_step=slot.admitted_step,
             finished_step=step))
+        self._release_lane(req)
         slot.req = None
         slot.generated = []
+
+    # -- reporting ----------------------------------------------------------
+    def stats(self, n_requests: int) -> dict:
+        out = super().stats(n_requests)
+        if self.pool is not None:
+            out["prefix_cache"] = dict(self.pool.stats)
+            out["prefix_cache"]["free_blocks"] = self.pool.free_blocks()
+        return out
 
 
 class SLOSchedule(ContinuousSchedule):
@@ -773,8 +881,7 @@ class SLOSchedule(ContinuousSchedule):
         for r in requests:
             self._check(r)
         queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        if self.caches is None:
-            self.caches = self.model.init_cache(self.n_slots, self.max_len)
+        self._ensure_caches()
         results: list[RequestResult] = []
         step = 0
         while queue or any(s.active for s in self.slots):
@@ -828,6 +935,7 @@ SCHEDULES = {
 # schedule-specific knobs `make_scheduler` strips for everyone else
 _SLO_KW = ("slo_ms",)
 _SPEC_KW = ("draft_depth", "draft", "drafter")
+_PREFIX_KW = ("prefix_cache", "prefix_blocks", "prefix_block_size")
 
 
 def make_scheduler(schedule: str, model, params, cfg, *, n_slots: int,
@@ -839,6 +947,9 @@ def make_scheduler(schedule: str, model, params, cfg, *, n_slots: int,
             kw.pop(key, None)
     if schedule != "spec":
         for key in _SPEC_KW:
+            kw.pop(key, None)
+    if schedule not in ("continuous", "slo"):  # pool rides slot admission
+        for key in _PREFIX_KW:
             kw.pop(key, None)
     if schedule not in ("slo", "spec"):   # in-flight window is async-only
         kw.pop("max_in_flight", None)

@@ -106,6 +106,17 @@ def run(argv=None) -> dict:
     ap.add_argument("--max-in-flight", type=int, default=8,
                     help="slo schedule only: bounded in-flight submission "
                          "window of the async stream")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="continuous/slo schedules: route admissions through "
+                         "the block-paged KV pool — a request whose prompt "
+                         "prefix is resident (shared system prompt, repeated "
+                         "round) admits with one gather dispatch instead of "
+                         "re-prefilling the matched blocks")
+    ap.add_argument("--prefix-blocks", type=int, default=64,
+                    help="prefix cache only: arena capacity in blocks")
+    ap.add_argument("--prefix-block-size", type=int, default=8,
+                    help="prefix cache only: tokens per block (should divide "
+                         "the prefill buckets, or chains never anchor)")
     ap.add_argument("--sampling", default="greedy", choices=SAMPLING_MODES,
                     help="greedy argmax or seeded categorical sampling")
     ap.add_argument("--weight-form", default="fp16", choices=WEIGHT_FORMS,
@@ -159,6 +170,12 @@ def run(argv=None) -> dict:
         extra = {"draft_depth": args.draft_depth, "draft": args.draft}
     else:
         stream = ExecutionStream(program_cache, target=target)
+    if args.prefix_cache:
+        if args.schedule not in ("continuous", "slo"):
+            ap.error(f"--prefix-cache serves --schedule continuous or slo, "
+                     f"not {args.schedule}")
+        extra.update(prefix_cache=True, prefix_blocks=args.prefix_blocks,
+                     prefix_block_size=args.prefix_block_size)
     sched = make_scheduler(args.schedule, model, params, cfg,
                            n_slots=args.batch, max_len=max_len,
                            sampling=args.sampling, seed=args.seed,
@@ -195,6 +212,12 @@ def run(argv=None) -> dict:
     if dispatcher is not None:
         out["routes"] = dict(Counter(
             (r.kernel, r.backend) for r in dispatcher.routes))
+    prefix_note = ""
+    if args.prefix_cache:
+        pc = stats["prefix_cache"]
+        prefix_note = (f" | prefix cache: {pc['hits']} hits / "
+                       f"{pc['misses']} misses, {pc['hit_tokens']} prefill "
+                       f"tokens skipped, {pc['evictions']} evictions")
     slo_note = ""
     if args.schedule == "slo":
         slo_note = (f" | in-flight<= {stats['max_in_flight']}, "
@@ -214,7 +237,7 @@ def run(argv=None) -> dict:
           f"dispatches, floor/request "
           f"{stats['per_request_dispatch_overhead_s']*1e6:.1f} us | "
           f"program cache h{program_cache.stats.hits}/"
-          f"m{program_cache.stats.misses}{slo_note}")
+          f"m{program_cache.stats.misses}{prefix_note}{slo_note}")
     return out
 
 

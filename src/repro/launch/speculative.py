@@ -172,6 +172,13 @@ class SpeculativeSchedule(ContinuousSchedule):
                  drafter: Drafter | None = None,
                  max_in_flight: int = MAX_IN_FLIGHT,
                  stream=None, program_cache=None, target=None, **kw) -> None:
+        if kw.get("prefix_cache"):
+            raise ValueError(
+                "SpeculativeSchedule does not route admissions through the "
+                "paged KV pool: joint target+drafter admission would need "
+                "both caches resident per block and the pool only pages the "
+                "target's. Serve prefix-cached traffic with "
+                "--schedule continuous or slo.")
         if stream is None:
             stream = AsyncExecutionStream(program_cache, target=target,
                                           max_in_flight=max_in_flight)

@@ -1,0 +1,518 @@
+"""Paged KV pool suite (tier: prefix cache).
+
+Three layers, cheapest first:
+
+  * **pool invariants** — the host-side metadata machine
+    (`launch/kv_pool.PagedKVPool`): prefix-trie matching on chained
+    token-block hashes, refcounts == live page-table references, LRU
+    eviction touches only refcount-0 blocks, copy-on-write never aliases a
+    shared block, and releasing a lane frees exactly its exclusively-owned
+    blocks. A seeded random-op interpreter drives the same checks two ways:
+    deterministic numpy fuzz (always runs) and hypothesis `@given` (CI
+    shrinks counterexamples; skipped cleanly when hypothesis is absent).
+  * **paged-attention parity** — `paged_decode_attention` against its jnp
+    oracle AND bit-identical to the monolithic-slab `decode_attention` over
+    ragged page tables (partial last block, permuted arena rows, K=0 empty
+    lane, sliding-window masks from the recurrentgemma regression).
+  * **device assembly** — pool-inserted prefill blocks gather back
+    *bitwise* equal to the prefill cache they came from (the property the
+    serve-scheduler prefix parity rides on), and malformed prefill trees
+    fail loudly with the tree path before any arena write.
+
+Every invariant check goes through `PagedKVPool.audit()`; to add a pool
+invariant, extend `audit` and the op interpreter below picks it up for
+free on every fuzzed sequence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels import compat
+from repro.kernels.flash.decode_attention import (decode_attention,
+                                                  decode_attention_ref,
+                                                  gather_pages,
+                                                  paged_decode_attention,
+                                                  paged_decode_attention_ref)
+from repro.launch.kv_pool import TIME_MERGE_LEAVES, PagedKVPool
+from repro.models.model import build_model
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # optional dep: numpy fuzz still runs
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Pool invariants: deterministic unit coverage
+# ---------------------------------------------------------------------------
+
+
+def toks(*xs):
+    return np.asarray(xs, np.int32)
+
+
+def test_pool_rejects_bad_geometry():
+    with pytest.raises(ValueError, match="n_blocks"):
+        PagedKVPool(0, 4)
+    with pytest.raises(ValueError, match="block_size"):
+        PagedKVPool(4, 0)
+
+
+def test_chain_hash_identifies_whole_prefix():
+    """Block k's key must depend on every token before it, not just its
+    own: two prompts sharing block-1 *content* but not block-0 must not
+    share block 1 (KV at position p is a function of tokens[0..p])."""
+    pool = PagedKVPool(8, 2)
+    k1, _, _ = pool.reserve(toks(1, 2, 5, 6))
+    k2, _, _ = pool.reserve(toks(3, 4, 5, 6))
+    assert k1[0] != k2[0] and k1[1] != k2[1]
+    pool.audit()
+    # same prefix -> same chain, nothing new allocated
+    again, new, _ = pool.reserve(toks(1, 2, 5, 6))
+    assert again == k1 and new == []
+    assert pool.free_blocks() == 8 - 4
+
+
+def test_match_walks_longest_resident_prefix():
+    pool = PagedKVPool(8, 2)
+    keys, _, _ = pool.reserve(toks(1, 2, 3, 4, 5, 6))
+    assert pool.match(toks(1, 2, 3, 4, 9, 9)) == keys[:2]
+    assert pool.match(toks(1, 2, 3, 4, 5, 6, 7)) == keys   # partial tail block
+    assert pool.match(toks(9, 9)) == []
+    # anchored_match only lands where a prefill boundary snapshot exists
+    assert pool.anchored_match(toks(1, 2, 3, 4)) == []
+    pool.set_anchor(keys[1], {"h": np.ones(2)})
+    assert pool.anchored_match(toks(1, 2, 3, 4, 5, 6)) == keys[:2]
+    assert pool.anchored_match(toks(1, 2, 3, 4, 5, 6), limit=3) == keys[:1] \
+        or pool.anchored_match(toks(1, 2, 3, 4, 5, 6), limit=3) == []
+    assert pool.anchored_match(toks(1, 2, 3, 4, 5, 6), limit=5) == keys[:2]
+    pool.audit()
+
+
+def test_release_frees_exactly_exclusive_blocks():
+    """The satellite invariant: freeing a lane returns exactly the blocks
+    nobody else references — shared prefix blocks stay resident and
+    referenced by the other owner."""
+    pool = PagedKVPool(8, 2)
+    a, _, _ = pool.reserve(toks(1, 2, 3, 4))
+    pool.acquire("r0", a)
+    b, _, _ = pool.reserve(toks(1, 2, 9, 9))      # shares block 0 with r0
+    pool.acquire("r1", b)
+    assert a[0] == b[0] and a[1] != b[1]
+    assert pool.refcount(a[0]) == 2 + 2           # two lanes + two children
+    pool.audit()
+    freed = pool.release("r1")
+    assert freed == [b[1]], "release must free exactly the exclusive block"
+    assert pool.refcount(a[0]) >= 1               # r0 still holds the prefix
+    assert b[1] in pool.resident()                # freed != evicted: cached
+    pool.audit()
+    freed = pool.release("r0")
+    assert set(freed) == {a[1]}                   # a[0] still has children
+    pool.audit()
+    # double acquire by the same owner is a bug upstream: loud
+    pool.acquire("r2", a)
+    with pytest.raises(ValueError, match="already holds"):
+        pool.acquire("r2", a[:1])
+    with pytest.raises(KeyError):
+        pool.acquire("r3", ["deadbeef"])
+
+
+def test_referenced_blocks_never_evicted():
+    """Allocation pressure evicts LRU refcount-0 blocks only; when every
+    block is referenced the pool reports exhaustion instead of stealing."""
+    pool = PagedKVPool(4, 2)
+    a, _, _ = pool.reserve(toks(1, 2, 3, 4))
+    pool.acquire("r0", a)
+    b, _, _ = pool.reserve(toks(5, 6, 7, 8))      # fills the pool
+    keys, new, first = pool.reserve(toks(9, 9, 8, 8))   # must evict b's chain
+    assert len(keys) == 2 and len(new) == 2
+    assert pool.stats["evictions"] == 2
+    assert all(k in pool.resident() for k in a), \
+        "a referenced block was evicted"
+    pool.audit()
+    # now everything is referenced: reserve comes back empty-handed
+    pool.acquire("r1", keys)
+    full, none_new, _ = pool.reserve(toks(4, 4, 4, 4))
+    assert full == [] and none_new == []
+    pool.audit()
+
+
+def test_lru_eviction_cascades_to_parents():
+    """A parent stays pinned by resident children (refcount counts them);
+    evicting the leaf re-enters the parent into the LRU list."""
+    pool = PagedKVPool(2, 2)
+    a, _, _ = pool.reserve(toks(1, 2, 3, 4))
+    assert pool.refcount(a[0]) == 1 and pool.refcount(a[1]) == 0
+    b, new, _ = pool.reserve(toks(7, 7, 8, 8))    # evicts leaf, then parent
+    assert len(b) == len(new) == 2
+    assert pool.stats["evictions"] == 2
+    assert pool.resident() == set(b)
+    pool.audit()
+
+
+def test_cow_write_never_aliases_shared_blocks():
+    """Divergence at a shared block lands on a fresh arena row; the shared
+    row is untouched and still referenced by the other lane."""
+    pool = PagedKVPool(8, 2)
+    a, _, _ = pool.reserve(toks(1, 2, 3, 4))
+    pool.acquire("r0", a)
+    pool.fork("r0", "r1")
+    assert pool.refcount(a[1]) == 2
+    pool.audit()
+    shared_bid = pool.bids_of(a[1:])[0]
+    new_key = pool.write("r1", 1, toks(8, 9))
+    assert new_key is not None and new_key != a[1]
+    assert pool.bids_of([new_key])[0] != shared_bid, "CoW aliased the row"
+    assert pool.table("r0") == a                  # r0's chain is untouched
+    assert pool.table("r1") == [a[0], new_key]
+    assert pool.refcount(a[1]) == 1               # r0's reference remains
+    pool.audit()
+    # content-identical write is a no-op on the chain
+    assert pool.write("r0", 1, toks(3, 4)) == a[1]
+    assert pool.table("r0") == a
+    pool.audit()
+    # write truncates the owner's suffix past the divergence point
+    pool.release("r1")
+    c, _, _ = pool.reserve(toks(1, 2, 3, 4, 5, 6))
+    pool.acquire("r2", c)
+    k = pool.write("r2", 0, toks(7, 7))
+    assert pool.table("r2") == [k]
+    pool.audit()
+    with pytest.raises(IndexError, match="cannot write"):
+        pool.write("r2", 5, toks(1, 2))
+    with pytest.raises(ValueError, match="one block"):
+        pool.write("r2", 0, toks(1, 2, 3))
+
+
+# ---------------------------------------------------------------------------
+# Pool invariants: seeded random-op interpreter (numpy fuzz + hypothesis)
+# ---------------------------------------------------------------------------
+
+#: tiny geometry + tiny alphabet on purpose: collisions, shared prefixes and
+#: eviction pressure on every run
+N_BLOCKS, BLOCK, ALPHABET = 6, 2, 3
+
+
+def run_ops(ops: list[tuple]) -> None:
+    """Interpret (op, *args) tuples against a fresh pool, auditing every
+    structural invariant after each op plus the release-exactness and
+    CoW-no-alias model checks the audit cannot see."""
+    pool = PagedKVPool(N_BLOCKS, BLOCK)
+    owners: dict[int, list[str]] = {}
+    next_owner = 0
+    for op in ops:
+        kind = op[0]
+        if kind == "insert":
+            tokens = np.asarray(op[1], np.int32)
+            keys, new, first = pool.reserve(tokens)
+            assert keys == pool.match(tokens)[: len(keys)]
+            if keys and op[2]:                      # sometimes anchor + own
+                pool.set_anchor(keys[-1], None)
+                pool.acquire(("o", next_owner), keys)
+                owners[next_owner] = keys
+                next_owner += 1
+        elif kind == "release" and owners:
+            oid = sorted(owners)[op[1] % len(owners)]
+            keys = owners.pop(oid)
+            before = {k: pool.refcount(k) for k in keys}
+            freed = pool.release(("o", oid))
+            for k in keys:
+                assert (k in freed) == (before[k] == 1), \
+                    "release freed a shared block or kept an exclusive one"
+                assert k in pool.resident()          # freed is not evicted
+        elif kind == "fork" and owners:
+            oid = sorted(owners)[op[1] % len(owners)]
+            pool.fork(("o", oid), ("o", next_owner))
+            owners[next_owner] = list(owners[oid])
+            next_owner += 1
+        elif kind == "write" and owners:
+            oid = sorted(owners)[op[1] % len(owners)]
+            table = pool.table(("o", oid))
+            if table:
+                idx = op[2] % len(table)
+                old = table[idx]
+                shared = pool.refcount(old) > 1
+                old_bid = pool.bids_of([old])[0]
+                new_key = pool.write(("o", oid), idx,
+                                     np.asarray(op[3], np.int32))
+                if new_key is not None and new_key != old and shared:
+                    assert pool.bids_of([new_key])[0] != old_bid, \
+                        "copy-on-write aliased a shared block"
+                owners[oid] = pool.table(("o", oid))
+        pool.audit()
+    # teardown: releasing every owner leaves zero lane references
+    for oid in sorted(owners):
+        pool.release(("o", oid))
+        pool.audit()
+    assert all(pool.refcount(k) == sum(
+        1 for n in pool.resident() if pool._nodes[n].parent == k)
+        for k in pool.resident())
+
+
+def _ops_from_rng(rng: np.random.Generator, n: int) -> list[tuple]:
+    ops = []
+    for _ in range(n):
+        r = rng.integers(0, 4)
+        if r == 0:
+            L = int(rng.integers(1, 5)) * BLOCK
+            ops.append(("insert",
+                        rng.integers(0, ALPHABET, size=(L,)).tolist(),
+                        bool(rng.integers(0, 2))))
+        elif r == 1:
+            ops.append(("release", int(rng.integers(0, 8))))
+        elif r == 2:
+            ops.append(("fork", int(rng.integers(0, 8))))
+        else:
+            ops.append(("write", int(rng.integers(0, 8)),
+                        int(rng.integers(0, 4)),
+                        rng.integers(0, ALPHABET, size=(BLOCK,)).tolist()))
+    return ops
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_pool_random_ops_numpy_fuzz(seed):
+    rng = np.random.default_rng(seed)
+    run_ops(_ops_from_rng(rng, 40))
+
+
+if HAVE_HYPOTHESIS:
+    block_tokens = st.lists(st.integers(0, ALPHABET - 1),
+                            min_size=BLOCK, max_size=BLOCK)
+    op_strategy = st.one_of(
+        st.tuples(st.just("insert"),
+                  st.lists(st.integers(0, ALPHABET - 1), min_size=BLOCK,
+                           max_size=4 * BLOCK).map(
+                      lambda t: t[: len(t) - len(t) % BLOCK] or t * BLOCK),
+                  st.booleans()),
+        st.tuples(st.just("release"), st.integers(0, 7)),
+        st.tuples(st.just("fork"), st.integers(0, 7)),
+        st.tuples(st.just("write"), st.integers(0, 7), st.integers(0, 3),
+                  block_tokens),
+    )
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(op_strategy, max_size=40))
+    def test_pool_random_ops_hypothesis(ops):
+        run_ops(list(ops))
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                      "(pip install -r requirements-test.txt)")
+    def test_pool_random_ops_hypothesis():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Paged attention parity: oracle + monolithic-slab bit-exactness
+# ---------------------------------------------------------------------------
+
+
+def _paged_case(rng, *, b=3, h=4, kvh=2, n=24, bs=8, nb=4, d=16,
+                lens=(25, 8, 0)):
+    """Ragged paged-decode operands: per-lane lengths cover a partial last
+    block, a block-exact lane and an empty (K=0) lane; arena rows are
+    permuted so block ids never equal block indices."""
+    q = rng.standard_normal((b, h, d)).astype(np.float32)
+    k = rng.standard_normal((n, bs, kvh, d)).astype(np.float32)
+    v = rng.standard_normal((n, bs, kvh, d)).astype(np.float32)
+    perm = rng.permutation(n)
+    bt = np.full((b, nb), -1, np.int32)
+    pos = np.full((n, bs), -1, np.int32)
+    for i, L in enumerate(lens):
+        for j in range((L + bs - 1) // bs):
+            bid = int(perm[i * nb + j])
+            bt[i, j] = bid
+            valid = min(bs, L - j * bs)
+            pos[bid, :valid] = np.arange(j * bs, j * bs + valid)
+    cur = np.maximum(np.asarray(lens, np.int32) - 1, 0)
+    return (jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+            jnp.asarray(pos), jnp.asarray(bt), jnp.asarray(cur))
+
+
+@pytest.mark.parametrize("window", [None, 9])
+def test_paged_decode_matches_oracle_ragged(window):
+    rng = np.random.default_rng(0)
+    q, k, v, pos, bt, cur = _paged_case(rng)
+    got = paged_decode_attention(q, k, v, pos, bt, cur, window=window)
+    want = paged_decode_attention_ref(q, k, v, pos, bt, cur, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 9])
+def test_paged_decode_bit_identical_to_monolithic(window):
+    """The page-table gather must be a pure relayout: against the
+    monolithic slab holding the same KV in the same order, with the chunk
+    size pinned to the block size (same accumulation order), the paged
+    path is bit-identical — not merely close."""
+    rng = np.random.default_rng(1)
+    q, k, v, pos, bt, cur = _paged_case(rng)
+    bs = k.shape[1]
+    k_slab = gather_pages(k, bt)
+    v_slab = gather_pages(v, bt)
+    pos_slab = jnp.where(jnp.repeat(bt >= 0, bs, axis=1),
+                         gather_pages(pos, bt), -1)
+    paged = paged_decode_attention(q, k, v, pos, bt, cur, window=window)
+    mono = decode_attention(q, k_slab, v_slab, pos_slab, cur,
+                            window=window, bk=bs)
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(mono))
+
+
+def test_paged_decode_empty_lane_matches_full_table_absence():
+    """A K=0 lane (all pages unmapped) attends over nothing: identical to
+    the monolithic path with an all-invalid positions row, and finite."""
+    rng = np.random.default_rng(2)
+    q, k, v, pos, bt, cur = _paged_case(rng, lens=(16, 0, 0))
+    out = np.asarray(paged_decode_attention(q, k, v, pos, bt, cur))
+    assert np.all(np.isfinite(out))
+    ref = np.asarray(paged_decode_attention_ref(q, k, v, pos, bt, cur))
+    np.testing.assert_allclose(out[1:], ref[1:], rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_ring_window_wrap_parity():
+    """The recurrentgemma regression shape: a sliding window smaller than
+    the resident history. The window mask must measure distance in
+    absolute positions straight from the pos arena — block order and row
+    permutation must not matter."""
+    rng = np.random.default_rng(3)
+    q, k, v, pos, bt, cur = _paged_case(rng, lens=(30, 21, 5))
+    for window in (4, 8, 32):
+        got = paged_decode_attention(q, k, v, pos, bt, cur, window=window)
+        want = paged_decode_attention_ref(q, k, v, pos, bt, cur,
+                                          window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5, err_msg=f"w={window}")
+    # the decisive check: shrinking the window really changes the output
+    full = paged_decode_attention(q, k, v, pos, bt, cur)
+    tight = paged_decode_attention(q, k, v, pos, bt, cur, window=4)
+    assert not np.allclose(np.asarray(full)[0], np.asarray(tight)[0])
+
+
+# ---------------------------------------------------------------------------
+# Device assembly: insert -> gather is bitwise, malformed trees fail loud
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "recurrentgemma-9b",
+                                  "mamba2-1.3b"])
+def test_pool_roundtrip_is_bitwise(arch):
+    """Prefill state routed through the arena and gathered back must be
+    bitwise identical to the prefill cache it came from — paged leaves
+    through `insert_blocks`/`assemble_prefix`, everything else (SSM conv /
+    recurrent state) verbatim through the anchor. The three archs cover
+    the classification matrix: attention (paged KV only), hybrid
+    (paged + recurrent anchor), pure SSM (anchor only — the pool
+    degenerates to boundary snapshots and must still round-trip)."""
+    cfg = configs.get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    s, max_len, bs = 16, 32, 8
+    prompt = rng.integers(0, cfg.vocab, size=(1, s)).astype(np.int32)
+    pf_caches, _ = jax.jit(model.prefill)(
+        params, {"tokens": jnp.asarray(prompt)})
+    dec = model.init_cache(2, max_len)
+
+    pool = PagedKVPool(8, bs)
+    pool.bind(dec, max_len=max_len)
+    if arch == "mamba2-1.3b":
+        assert not pool._paged_paths, "pure SSM has no KV time axis to page"
+    else:
+        assert pool._paged_paths, f"{arch}: nothing paged"
+    pool.validate_prefill(pf_caches, s)
+    keys, new_bids, first = pool.reserve(prompt[0])
+    assert len(keys) == s // bs and first == 0
+    pool.arenas = pool.insert_blocks(pool.arenas, pf_caches,
+                                     jnp.asarray(new_bids, jnp.int32), first)
+    pool.set_anchor(keys[-1], pool.anchor_leaves(pf_caches))
+
+    assembled = pool.assemble_prefix(dec, pool.arenas,
+                                     jnp.asarray(pool.bids_of(keys),
+                                                 jnp.int32),
+                                     pool.anchor_of(keys[-1]))
+    pf = {compat.tree_path_str(p): v
+          for p, v in compat.tree_flatten_with_path(pf_caches)[0]}
+    n_paged = n_anchor = 0
+    for path, leaf in compat.tree_flatten_with_path(assembled)[0]:
+        loc = compat.tree_path_str(path)
+        np.testing.assert_array_equal(
+            np.asarray(leaf), np.asarray(pf[loc]),
+            err_msg=f"{arch} {loc}: pool round-trip is not bitwise")
+        if loc in pool._paged_paths:
+            n_paged += 1
+        else:
+            n_anchor += 1
+    if arch != "mamba2-1.3b":
+        assert n_paged > 0
+    if arch != "tinyllama-1.1b":
+        assert n_anchor > 0, "recurrent state must ride the anchor"
+
+
+def test_pool_validate_prefill_fails_loud_with_path():
+    """The merge loud-failure regression, pool flavor: a page-table/arena
+    rank or off-axis mismatch raises with the tree path instead of
+    silently caching truncated or misshapen state."""
+    bs = 4
+    dec = {"g0": {"sub0": {"k": jnp.zeros((2, 3, 16, 2, 8)),
+                           "pos": jnp.zeros((2, 3, 16), jnp.int32),
+                           "h": jnp.zeros((2, 3, 5))}}}
+    pool = PagedKVPool(4, bs)
+    pool.bind(dec, max_len=16)
+    assert set(pool._paged_paths) == {"g0/sub0/k", "g0/sub0/pos"}
+
+    ok = {"g0": {"sub0": {"k": jnp.zeros((2, 1, 8, 2, 8)),
+                          "pos": jnp.zeros((2, 1, 8), jnp.int32),
+                          "h": jnp.ones((2, 1, 5))}}}
+    pool.validate_prefill(ok, 8)
+
+    bad_rank = jax.tree_util.tree_map(lambda x: x, ok)
+    bad_rank["g0"]["sub0"]["k"] = jnp.zeros((2, 1, 8, 2))
+    with pytest.raises(ValueError, match=r"g0/sub0/k.*rank"):
+        pool.validate_prefill(bad_rank, 8)
+
+    bad_time = jax.tree_util.tree_map(lambda x: x, ok)
+    bad_time["g0"]["sub0"]["k"] = jnp.zeros((2, 1, 6, 2, 8))
+    with pytest.raises(ValueError, match=r"g0/sub0/k.*time extent"):
+        pool.validate_prefill(bad_time, 8)
+
+    bad_axis = jax.tree_util.tree_map(lambda x: x, ok)
+    bad_axis["g0"]["sub0"]["k"] = jnp.zeros((2, 1, 8, 3, 8))
+    with pytest.raises(ValueError, match=r"g0/sub0/k.*arena row"):
+        pool.validate_prefill(bad_axis, 8)
+
+    bad_batch = jax.tree_util.tree_map(lambda x: x, ok)
+    bad_batch["g0"]["sub0"]["k"] = jnp.zeros((2, 2, 8, 2, 8))
+    with pytest.raises(ValueError, match=r"g0/sub0/k.*batch"):
+        pool.validate_prefill(bad_batch, 8)
+
+    bad_tree = {"g0": {"sub0": {"k": ok["g0"]["sub0"]["k"],
+                                "pos": ok["g0"]["sub0"]["pos"]}}}
+    with pytest.raises(ValueError, match=r"structure diverges.*g0/sub0/h"):
+        pool.validate_prefill(bad_tree, 8)
+
+    # a missing anchor leaf at assembly is state loss: loud, with the path
+    with pytest.raises(ValueError, match=r"g0/sub0/h.*anchor"):
+        pool.assemble_prefix(dec, pool.arenas, jnp.zeros((1,), jnp.int32),
+                             {})
+
+
+def test_pool_bind_classifies_ring_leaves_as_anchor():
+    """A sliding-window KV leaf (time extent = window < max_len) is a ring
+    buffer — paging it by absolute position would be wrong, so it must
+    ride the anchor; named KV leaves at full extent must page."""
+    dec = {"attn": {"k": jnp.zeros((1, 2, 32, 2, 4)),
+                    "v": jnp.zeros((1, 2, 32, 2, 4)),
+                    "pos": jnp.zeros((1, 2, 32), jnp.int32)},
+           "win": {"k": jnp.zeros((1, 2, 8, 2, 4)),
+                   "pos": jnp.zeros((1, 2, 8), jnp.int32)},
+           "ssm": {"state": jnp.zeros((1, 2, 16, 4))}}
+    pool = PagedKVPool(4, 4)
+    pool.bind(dec, max_len=32)
+    assert pool._paged_paths == {"attn/k", "attn/v", "attn/pos"}
+    assert pool._anchor_paths == {"win/k", "win/pos", "ssm/state"}
+    for loc, arena in pool.arenas.items():
+        assert arena.shape[:3] == (4, 1, 4), loc
+    assert sorted(TIME_MERGE_LEAVES) == ["c_kv", "k", "k_rope", "pos", "v"]

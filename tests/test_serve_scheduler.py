@@ -562,6 +562,182 @@ def test_merge_preserves_recurrent_state(arch):
     assert any_recurrent, f"{arch}: no recurrent state leaf was checked"
 
 
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "recurrentgemma-9b"])
+def test_pool_insert_validates_paged_leaves_loud(arch):
+    """The PR 3 merge regression, extended to the pool's arena writes: a
+    prefill leaf that does not line up with the bound arena (rank, time
+    extent, off-axis tail) must raise with the tree path before any block
+    is inserted — never silently cache truncated KV/ring state."""
+    from repro.kernels import compat
+    from repro.launch.kv_pool import PagedKVPool
+
+    cfg, model, params = _served_model(arch, "fp16", dispatched=False)
+    # max_len == the recurrentgemma ring window so its KV extent spans the
+    # whole table and classifies as paged (beyond it, rings only anchor)
+    s, max_len = 16, 32
+    pool = PagedKVPool(8, 8)
+    pool.bind(model.init_cache(1, max_len), max_len=max_len)
+    assert pool._paged_paths, f"{arch}: expected paged KV leaves"
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(1, s)), jnp.int32)}
+    pf, _ = jax.jit(model.prefill)(params, batch)
+    pool.validate_prefill(pf, s)             # the healthy tree passes
+
+    target = sorted(pool._paged_paths)[0]
+    leafname = target.rsplit("/", 1)[-1]
+
+    def mangle(fn):
+        return compat.tree_map_with_path(
+            lambda p, v: fn(v) if compat.tree_path_str(p) == target else v,
+            pf)
+
+    # time axis one token short: the off-axis merge bug, paged edition
+    with pytest.raises(ValueError, match=rf"{leafname}.*time extent"):
+        pool.validate_prefill(mangle(lambda v: v[:, :, : s - 1]), s)
+    # rank mismatch (head axis collapsed)
+    with pytest.raises(ValueError, match=rf"{leafname}.*rank"):
+        pool.validate_prefill(mangle(lambda v: v[..., 0]), s)
+    # off-axis tail mismatch (head dim halved)
+    bad = mangle(lambda v: v[..., : max(1, v.shape[-1] // 2)])
+    with pytest.raises(ValueError, match=rf"{leafname}"):
+        pool.validate_prefill(bad, s)
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache: hit admissions are token-exact with cold admissions
+# ---------------------------------------------------------------------------
+
+
+def _serve_prefix(schedule, arch, form, rounds=2, lens=None, gen=6,
+                  **sched_kw):
+    """One prefix-cached scheduler serving `rounds` identical request
+    rounds: round 1 is all cold (inserts), round 2+ admits every bucketed
+    prompt from resident blocks. Returns per-round {rid: result} + sched."""
+    cfg, model, params = _served_model(arch, form)
+    lens = lens or PARITY_LENS
+    cache = ProgramCache()
+    stream = (AsyncExecutionStream(cache, target=V5E) if schedule == "slo"
+              else ExecutionStream(cache, target=V5E))
+    sched = make_scheduler(schedule, model, params, cfg, n_slots=3,
+                           max_len=max(lens) + gen, sampling="greedy",
+                           seed=0, stream=stream, prefix_cache=True,
+                           prefix_blocks=64, prefix_block_size=8, **sched_kw)
+    outs = []
+    for _ in range(rounds):
+        outs.append({r.rid: r for r in sched.run(_requests(cfg, lens, gen))})
+    return outs, sched
+
+
+def _check_prefix_parity(arch, form, schedule="continuous"):
+    """The sweep body: cold round == warm (prefix-hit) round == the
+    sequential reference, token for token, and the warm round really did
+    hit (bucketed prompts admit without any prefill dispatch)."""
+    (cold, warm), sched = _serve_prefix(schedule, arch, form)
+    assert sched.pool.stats["hits"] > 0, "warm round never hit the pool"
+    assert sched.pool.stats["hit_tokens"] > 0
+    seq, _ = _serve("sequential", arch, form, PARITY_LENS, gen=6)
+    for rid in seq:
+        np.testing.assert_array_equal(
+            cold[rid].tokens, seq[rid].tokens,
+            err_msg=f"{arch}/{form} rid={rid}: cold prefix-pool round "
+                    f"diverged from the sequential reference")
+        np.testing.assert_array_equal(
+            warm[rid].tokens, seq[rid].tokens,
+            err_msg=f"{arch}/{form} rid={rid}: prefix-HIT admission "
+                    f"diverged from the cold stream")
+        assert warm[rid].bucket == cold[rid].bucket
+    # all lanes released their page tables at completion
+    assert sched.pool.owners() == set()
+    sched.pool.audit()
+
+
+@pytest.mark.parametrize("schedule", ["continuous", "slo"])
+@pytest.mark.parametrize("arch,form", FAST_PARITY)
+def test_prefix_cache_parity(arch, form, schedule):
+    _check_prefix_parity(arch, form, schedule)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,form", SLOW_PARITY)
+def test_prefix_cache_parity_sweep(arch, form):
+    """The arch x weight-form sweep of the prefix tier: hybrids and pure
+    SSMs exercise the anchor path (recurrent state snapshots at prefill
+    boundaries), int4 exercises packed-weight prefill into the arena."""
+    _check_prefix_parity(arch, form, "continuous")
+
+
+def test_prefix_cache_shares_within_one_round():
+    """Cross-request sharing, not just cross-round: requests with one
+    common system prompt hit the pool inside a single round and save
+    whole floor-charged dispatches vs the baseline."""
+    cfg, model, params = _served_model("tinyllama-1.1b", "fp16")
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab, size=(16,)).astype(np.int32)
+    reqs = [Request(rid=i, prompt=np.concatenate(
+                [shared, rng.integers(0, cfg.vocab,
+                                      size=(3 + i,)).astype(np.int32)]),
+                    max_new_tokens=5) for i in range(4)]
+
+    def serve(prefix):
+        stream = ExecutionStream(ProgramCache(), target=V5E)
+        sched = make_scheduler(
+            "continuous", model, params, cfg, n_slots=2, max_len=40,
+            sampling="greedy", seed=0, stream=stream,
+            **(dict(prefix_cache=True, prefix_block_size=8) if prefix
+               else {}))
+        res = {r.rid: r for r in sched.run(
+            [Request(rid=r.rid, prompt=r.prompt.copy(),
+                     max_new_tokens=r.max_new_tokens) for r in reqs])}
+        return res, sched
+
+    base, bsched = serve(False)
+    pooled, psched = serve(True)
+    for rid in base:
+        np.testing.assert_array_equal(base[rid].tokens, pooled[rid].tokens)
+    assert psched.pool.stats["hits"] == 3        # requests 1-3 reuse req 0's
+    assert psched.pool.stats["misses"] == 1
+    assert len(psched.stream.records) < len(bsched.stream.records), \
+        "prefix hits must save whole dispatches"
+
+
+def test_prefix_cache_rejects_bad_setups():
+    cfg, model, params = _served_model("tinyllama-1.1b", "fp16")
+    # speculative: the pool only pages the target's cache — loud, not silent
+    with pytest.raises(ValueError, match="prefix"):
+        SpeculativeSchedule(model, params, cfg, n_slots=1, max_len=16,
+                            prefix_cache=True)
+    # sequential strips the knob (no slot admission to route through)
+    seq = make_scheduler("sequential", model, params, cfg, max_len=16,
+                         n_slots=1, prefix_cache=True, prefix_blocks=8)
+    assert not hasattr(seq, "pool")
+    # encdec: cross-attention cache depends on per-request frames
+    ecfg, emodel, eparams = _served_model("whisper-small", "fp16")
+    with pytest.raises(ValueError, match="encdec"):
+        make_scheduler("continuous", emodel, eparams, ecfg, n_slots=1,
+                       max_len=16, prefix_cache=True)
+
+
+def test_serve_cli_prefix_cache_round_trip():
+    """`--prefix-cache` end to end: identical tokens with the pool on and
+    off, pool stats surfaced, round 2 admitted from resident blocks."""
+    # 17 = 2 whole blocks of matchable prefix (the match limit is L-1, so a
+    # 16-token prompt tops out at one block = 8 < bucket 16 and never hits)
+    argv = ["--smoke", "--batch", "2", "--prompt-len", "17", "--gen", "4",
+            "--sampling", "greedy", "--requests", "2"]
+    off = serve_mod.run(argv + ["--schedule", "continuous"])
+    on = serve_mod.run(argv + ["--schedule", "continuous", "--prefix-cache"])
+    np.testing.assert_array_equal(on["tokens"], off["tokens"])
+    assert "prefix_cache" not in off
+    assert on["prefix_cache"]["hits"] > 0
+    assert on["prefix_cache"]["hit_tokens"] > 0
+    assert on["n_dispatches"] < off["n_dispatches"] + \
+        on["prefix_cache"]["misses"] + 1   # hits saved prefill dispatches
+    slo = serve_mod.run(argv + ["--schedule", "slo", "--prefix-cache"])
+    np.testing.assert_array_equal(slo["tokens"], off["tokens"])
+    assert slo["prefix_cache"]["hits"] > 0
+
+
 # ---------------------------------------------------------------------------
 # Sampling modes (the --greedy no-op regression)
 # ---------------------------------------------------------------------------
