@@ -50,6 +50,24 @@ def make_requests(cfg, lens, gen: int, *, rid0: int = 0, seed: int = 0):
             for i, L in enumerate(lens)]
 
 
+def make_motif_requests(cfg, lens, gen: int, *, rid0: int = 0,
+                        seed: int = 0, step: int = 0):
+    """Requests whose prompts come from the synthetic MOTIF distribution
+    (`data.pipeline.SyntheticLM.prompt_batch`) instead of uniform noise —
+    in-distribution traffic for a teacher trained on the motif corpus.
+    Drafter acceptance is only measurable here: on uniform prompts a
+    teacher and its distilled student agree only by luck."""
+    from repro.data.pipeline import DataConfig, SyntheticLM
+
+    src = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=max(lens),
+                                 global_batch=len(lens), seed=seed))
+    toks = src.prompt_batch(step, len(lens), max(lens))
+    return [Request(rid=rid0 + i,
+                    prompt=np.asarray(toks[i, :L], np.int32),
+                    max_new_tokens=gen)
+            for i, L in enumerate(lens)]
+
+
 def timed_round(sched, cfg, lens, gen: int, rep: int):
     """One fresh-rid serving round; returns (wall_s, {local rid: tokens})."""
     reqs = make_requests(cfg, lens, gen, rid0=rep * len(lens))

@@ -115,21 +115,26 @@ class CheckpointManager:
         return s[-1] if s else None
 
     # ------------------------------------------------------------------
-    def save(self, step: int, tree) -> None:
-        """Synchronous atomic save."""
+    def save(self, step: int, tree, metadata: dict | None = None) -> None:
+        """Synchronous atomic save. `metadata` is a small JSON-serializable
+        dict written alongside the arrays (inside the atomic step dir, so it
+        commits with them) — provenance a consumer can validate against
+        before loading, e.g. the drafter checkpoints record arch/vocab/
+        d_model/weight form and `Drafter.shrink` rejects mismatches loud."""
         snapshot = jax.tree.map(
             lambda x: np.asarray(x) if x is not None else None, tree,
             is_leaf=lambda x: x is None)
-        self._write(step, snapshot)
+        self._write(step, snapshot, metadata)
 
-    def save_async(self, step: int, tree) -> None:
+    def save_async(self, step: int, tree,
+                   metadata: dict | None = None) -> None:
         """Snapshot to host now; write on a background thread."""
         self.wait()
         snapshot = jax.tree.map(
             lambda x: np.asarray(x) if x is not None else None, tree,
             is_leaf=lambda x: x is None)
         self._thread = threading.Thread(
-            target=self._write, args=(step, snapshot), daemon=True)
+            target=self._write, args=(step, snapshot, metadata), daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
@@ -137,7 +142,8 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, snapshot) -> None:
+    def _write(self, step: int, snapshot,
+               metadata: dict | None = None) -> None:
         final = self._step_dir(step)
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -152,12 +158,28 @@ class CheckpointManager:
                  **{k.replace(_SEP, "|"): v for k, v in arrays.items()})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        if metadata is not None:
+            with open(os.path.join(tmp, "metadata.json"), "w") as f:
+                json.dump(metadata, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
         with open(os.path.join(final, "COMMIT"), "w") as f:
             f.write("ok")
         self._gc()
+
+    def metadata(self, step: int | None = None) -> dict | None:
+        """The metadata dict saved with `step` (default: latest committed),
+        or None when the checkpoint carries none."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        path = os.path.join(self._step_dir(step), "metadata.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
 
     def _gc(self) -> None:
         steps = self.steps()

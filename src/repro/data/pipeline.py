@@ -43,22 +43,40 @@ class SyntheticLM:
         self._motifs = rng.integers(
             0, cfg.vocab, size=(cfg.n_motifs, cfg.motif_len))
 
+    def _tokens(self, rng: np.random.Generator, b: int,
+                length: int) -> np.ndarray:
+        """(b, length) Zipf background with planted motifs — the one token
+        distribution both the training batches and the serving prompts draw
+        from."""
+        cfg = self.cfg
+        z = rng.zipf(cfg.zipf_a, size=(b, length)) - 1
+        toks = np.minimum(z, cfg.vocab - 1).astype(np.int32)
+        # plant motifs: ~half the positions covered by repeated motifs
+        n_plant = max(1, length // (2 * cfg.motif_len))
+        for i in range(b):
+            ids = rng.integers(0, cfg.n_motifs, size=n_plant)
+            starts = rng.integers(0, length - cfg.motif_len, size=n_plant)
+            for m, st in zip(ids, starts):
+                toks[i, st: st + cfg.motif_len] = self._motifs[m]
+        return toks
+
     def batch(self, step: int) -> dict[str, np.ndarray]:
         """Pure function of (seed, step): restart-safe."""
         cfg = self.cfg
         rng = np.random.default_rng((cfg.seed, step))
-        b, s = cfg.global_batch, cfg.seq_len
-        # Zipf background
-        z = rng.zipf(cfg.zipf_a, size=(b, s + 1)) - 1
-        toks = np.minimum(z, cfg.vocab - 1).astype(np.int32)
-        # plant motifs: ~half the positions covered by repeated motifs
-        n_plant = max(1, (s + 1) // (2 * cfg.motif_len))
-        for i in range(b):
-            ids = rng.integers(0, cfg.n_motifs, size=n_plant)
-            starts = rng.integers(0, s + 1 - cfg.motif_len, size=n_plant)
-            for m, st in zip(ids, starts):
-                toks[i, st: st + cfg.motif_len] = self._motifs[m]
+        toks = self._tokens(rng, cfg.global_batch, cfg.seq_len + 1)
         return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+    def prompt_batch(self, step: int, n: int, length: int) -> np.ndarray:
+        """(n, length) serving prompts from the SAME motif distribution the
+        model trains on — a distinct stream from `batch` (the step space is
+        keyed apart), so held-out prompts never replay a training batch.
+        This is what makes drafter acceptance measurable: on uniform-random
+        prompts a teacher and its student agree only by luck; on in-
+        distribution prompts agreement reflects the distillation."""
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step, 0x9E37))
+        return self._tokens(rng, n, max(length, cfg.motif_len))[:, :length]
 
     def host_shard(self, batch: dict[str, np.ndarray], host_id: int,
                    n_hosts: int) -> dict[str, np.ndarray]:

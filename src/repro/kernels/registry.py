@@ -527,6 +527,67 @@ def _register_specdec() -> None:
     ))
 
 
+def _specdec_tree_inputs(case: ShapeCase, dtype, rng) -> dict:
+    b, nbr, t, v = case.dims
+    # np.array (not asarray): _normal may hand back a read-only device view
+    # and the tie_branches case writes into rows below
+    scores = np.array(_normal(rng, (b, nbr, t, v), dtype), np.float32)
+    # per (lane, branch): copy the target's picks for a random-length prefix
+    # then force the first mismatch — accept lengths span reject-at-once to
+    # accept-all, and lanes where several branches tie on the max accept
+    # length exercise the first-index branch tie-break
+    picks = np.argmax(scores, axis=-1)
+    draft = rng.integers(0, v, size=(b, nbr, max(t - 1, 0))).astype(np.int32)
+    for i in range(b):
+        for j in range(nbr):
+            keep = int(rng.integers(0, t))
+            draft[i, j, :keep] = picks[i, j, :keep]
+            if keep < t - 1:
+                draft[i, j, keep] = (picks[i, j, keep] + 1) % v
+        if case.name == "tie_branches" and nbr > 1 and t > 1:
+            # two sibling branches with identical accept lengths: the
+            # kernel must pick the first, like the oracle's jnp.argmax
+            draft[i, 1] = draft[i, 0]
+            scores[i, 1] = scores[i, 0]
+    return {"scores": jnp.asarray(scores), "draft": jnp.asarray(draft)}
+
+
+def _specdec_tree_packed(fn, i):
+    samples, accept, branch = fn(i["scores"], i["draft"])
+    return jnp.concatenate(
+        [samples, accept[:, None], branch[:, None]], axis=1)
+
+
+def _register_specdec_tree() -> None:
+    from repro.kernels.specdec.ref import verify_accept_tree_ref
+    from repro.kernels.specdec.specdec import verify_accept_tree_kernel
+
+    register(KernelSpec(
+        name="specdec_tree",
+        # same hardware gate as the chain row: the per-branch resample is
+        # an argmax; the branch reduction is a max + first-index min on top
+        capability_op="argmax",
+        dtypes=(jnp.float32,),          # sampler math is fp32 by contract
+        cases=(
+            # dims = (B, branches, K+1 window positions, vocab)
+            ShapeCase("fanout2", (4, 2, 5, 512)),
+            ShapeCase("fanout3", (2, 3, 4, 384)),
+            ShapeCase("single_branch", (3, 1, 4, 256), edge=True),  # == chain
+            ShapeCase("tie_branches", (3, 2, 5, 256), edge=True),
+            ShapeCase("ragged_vocab", (2, 2, 4, 301), edge=True),
+            ShapeCase("bonus_only", (2, 2, 1, 128), edge=True),     # K = 0
+        ),
+        make_inputs=_specdec_tree_inputs,
+        run_kernel=lambda i: _specdec_tree_packed(verify_accept_tree_kernel, i),
+        run_oracle=lambda i: _specdec_tree_packed(verify_accept_tree_ref, i),
+        tol=lambda dt: (0.0, 0.0),      # integer outputs: exact or wrong
+        cost=lambda c, dt: OpCost(
+            f"specdec_tree/{c.name}",
+            2.0 * c.dims[0] * c.dims[1] * c.dims[2] * c.dims[3],
+            4.0 * c.dims[0] * c.dims[1] * c.dims[2] * (c.dims[3] + 2.0)),
+    ))
+
+
 # ---------------------------------------------------------------------------
 # Registration (import-time, idempotent via the duplicate guard)
 # ---------------------------------------------------------------------------
@@ -534,5 +595,5 @@ def _register_specdec() -> None:
 
 for _reg in (_register_anemm, _register_palette, _register_sparse,
              _register_flash, _register_decode, _register_paged_decode,
-             _register_act_lut, _register_specdec):
+             _register_act_lut, _register_specdec, _register_specdec_tree):
     _reg()

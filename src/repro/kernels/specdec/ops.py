@@ -19,8 +19,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.specdec.ref import verify_accept_ref
-from repro.kernels.specdec.specdec import verify_accept_kernel
+from repro.kernels.specdec.ref import verify_accept_ref, verify_accept_tree_ref
+from repro.kernels.specdec.specdec import (verify_accept_kernel,
+                                           verify_accept_tree_kernel)
 
 
 def seeded_scores(logits: jnp.ndarray, root, rids: jnp.ndarray,
@@ -61,3 +62,23 @@ def verify_accept(scores: jnp.ndarray, draft: jnp.ndarray, *,
         dispatcher, "specdec", scores.dtype,
         lambda: verify_accept_kernel(scores, draft),
         lambda: verify_accept_ref(scores, draft))
+
+
+def verify_accept_tree(scores: jnp.ndarray, draft: jnp.ndarray, *,
+                       dispatcher=None):
+    """Routed tree verify/accept over sibling draft branches per lane:
+    (samples (B, T) i32, accept_len (B,) i32, branch (B,) i32).
+
+    Same accept-prefix + bonus-resample math as `verify_accept`, reduced
+    over the NBR branch axis on device (max accept, first-index tie-break);
+    a single-branch tree is bit-for-bit the chain kernel. Resolves through
+    the `specdec_tree` registry row when a dispatcher is given.
+    """
+    if dispatcher is None:
+        return verify_accept_tree_kernel(scores, draft)
+    from repro.models.dispatched import route_and_run
+
+    return route_and_run(
+        dispatcher, "specdec_tree", scores.dtype,
+        lambda: verify_accept_tree_kernel(scores, draft),
+        lambda: verify_accept_tree_ref(scores, draft))

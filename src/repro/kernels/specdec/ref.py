@@ -11,6 +11,24 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def verify_accept_tree_ref(scores: jnp.ndarray, draft: jnp.ndarray):
+    """scores (B, NBR, T, V) fp32, draft (B, NBR, T-1) int32 ->
+    (samples (B, T) i32, accept_len (B,) i32, branch (B,) i32): per-branch
+    accept-prefix lengths, then the first branch attaining the max; the
+    returned samples are that branch's per-position picks."""
+    b, nbr, t, _ = scores.shape
+    picks = jnp.argmax(scores.astype(jnp.float32), axis=-1).astype(jnp.int32)
+    if t == 1:
+        acc = jnp.zeros((b, nbr), jnp.int32)
+    else:
+        matches = (draft.astype(jnp.int32) == picks[:, :, : t - 1])
+        acc = jnp.sum(jnp.cumprod(matches.astype(jnp.int32), axis=2),
+                      axis=2).astype(jnp.int32)
+    branch = jnp.argmax(acc, axis=1).astype(jnp.int32)  # first index on ties
+    samples = jnp.take_along_axis(picks, branch[:, None, None], axis=1)[:, 0]
+    return samples, jnp.max(acc, axis=1), branch
+
+
 def verify_accept_ref(scores: jnp.ndarray, draft: jnp.ndarray):
     """scores (B, T, V) fp32, draft (B, T-1) int32 ->
     (samples (B, T) int32, accept_len (B,) int32)."""

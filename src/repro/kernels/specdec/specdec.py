@@ -60,6 +60,89 @@ def _kernel(scores_ref, draft_ref, samp_ref, acc_ref, *, t: int, v: int):
     acc_ref[0, 0] = acc
 
 
+def _tree_kernel(scores_ref, draft_ref, samp_ref, acc_ref, br_ref, *,
+                 nbr: int, t: int, v: int):
+    """One lane's draft tree: scores (1, NBR, T, Vp) f32, draft
+    (1, NBR, max(T-1, 1)) i32 -> samples (1, T) i32, accept_len (1, 1) i32,
+    branch (1, 1) i32.
+
+    Each branch is an independent chain sharing the window's first position;
+    the per-branch math is exactly `_kernel`'s accept-prefix scan, then the
+    winning branch is the one with the longest accepted prefix (first-index
+    tie-break, so NBR=1 degenerates to the chain kernel bit for bit — ties
+    between sibling branches only happen when their accepted prefixes are
+    identical token strings anyway, because accepted tokens ARE the target's
+    picks)."""
+    s = scores_ref[0].astype(jnp.float32)            # (NBR, T, Vp)
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(col < v, s, NEG_INF)               # padding never wins
+    m = jnp.max(s, axis=-1, keepdims=True)
+    # first-index argmax per (branch, position)
+    idx = jnp.min(jnp.where(s == m, col, v), axis=-1).astype(jnp.int32)
+    alive = jnp.ones((nbr,), jnp.int32)              # idx: (NBR, T)
+    acc = jnp.zeros((nbr,), jnp.int32)
+    for i in range(t - 1):
+        alive = alive * (draft_ref[0, :, i] == idx[:, i]).astype(jnp.int32)
+        acc = acc + alive
+    best = jnp.max(acc)
+    bidx = jax.lax.broadcasted_iota(jnp.int32, (nbr,), 0)
+    win = jnp.min(jnp.where(acc == best, bidx, nbr)).astype(jnp.int32)
+    acc_ref[0, 0] = best
+    br_ref[0, 0] = win
+    # the winning branch's picks, gather-free: one-hot select over NBR
+    onehot = (bidx[:, None] == win).astype(jnp.int32)           # (NBR, 1)
+    samp_ref[0, :] = jnp.sum(idx * onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("vocab",))
+def verify_accept_tree_kernel(scores: jnp.ndarray, draft: jnp.ndarray, *,
+                              vocab: int | None = None):
+    """Fused verify/accept over a *tree* of speculative branches.
+
+    scores: (B, NBR, T, V) fp32 — target scores per (branch, position); the
+        NBR branches of a lane share position 0's context and diverge on
+        their first proposed token.
+    draft:  (B, NBR, T-1) int32 — each branch's proposal chain.
+    Returns (samples (B, T) int32, accept_len (B,) int32, branch (B,) int32):
+    the winning branch's target picks, its matched-prefix length (the max
+    over branches, first index on ties), and which branch won; the window
+    emits `samples[:, :accept_len + 1]`.
+    """
+    b, nbr, t, v = scores.shape
+    vocab = v if vocab is None else vocab
+    if nbr < 1:
+        raise ValueError(f"tree needs >= 1 branch, got {nbr}")
+    if draft.shape != (b, nbr, t - 1):
+        raise ValueError(f"draft {draft.shape} does not pair with scores "
+                         f"{scores.shape}; want ({b}, {nbr}, {t - 1})")
+    vp = 128 * cdiv(max(v, 1), 128)
+    sp = jnp.pad(scores.astype(jnp.float32),
+                 ((0, 0), (0, 0), (0, 0), (0, vp - v)),
+                 constant_values=NEG_INF)
+    dp = draft.astype(jnp.int32) if t > 1 else \
+        jnp.full((b, nbr, 1), -1, jnp.int32)
+    samples, accept, branch = pl.pallas_call(
+        functools.partial(_tree_kernel, nbr=nbr, t=t, v=min(v, vocab)),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, nbr, t, vp), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, nbr, dp.shape[2]), lambda i: (i, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, t), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ),
+        interpret=interpret_mode(),
+    )(sp, dp)
+    return samples, accept[:, 0], branch[:, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("vocab",))
 def verify_accept_kernel(scores: jnp.ndarray, draft: jnp.ndarray, *,
                          vocab: int | None = None):

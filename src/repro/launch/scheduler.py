@@ -934,7 +934,8 @@ SCHEDULES = {
 
 # schedule-specific knobs `make_scheduler` strips for everyone else
 _SLO_KW = ("slo_ms",)
-_SPEC_KW = ("draft_depth", "draft", "drafter")
+_SPEC_KW = ("draft_depth", "draft", "drafter", "draft_ckpt",
+            "draft_branches")
 _PREFIX_KW = ("prefix_cache", "prefix_blocks", "prefix_block_size")
 
 

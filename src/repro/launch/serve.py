@@ -34,8 +34,10 @@ The paper's serving shape (ch. 2/5/14), end to end:
     unfinished overlapping-streams path, §2.4).
   * **speculative decoding** — `--schedule spec` serves draft->verify
     windows on the async stream: a drafter (`--draft shrink` depth-pruned
-    second model / `--draft self` the target itself) proposes
-    `--draft-depth` tokens in one dispatch, and one fused verify dispatch
+    second model, optionally loaded from a `launch.distill` checkpoint via
+    `--draft-ckpt` / `--draft self` the target itself) proposes
+    `--draft-depth` tokens — or `--draft-branches` sibling chains of them
+    (tree verification) — in one dispatch, and one fused verify dispatch
     resamples them on device through the `specdec` kernel — two dispatch
     floors buy up to depth+1 tokens (§9 economics), token-exact against
     the sequential reference.
@@ -96,9 +98,19 @@ def run(argv=None) -> dict:
     ap.add_argument("--draft", default="shrink", choices=DRAFT_KINDS,
                     help="spec schedule only: 'shrink' builds a depth-pruned "
                          "draft model from the target config (the real "
-                         "two-model path; with random-init weights its "
-                         "proposals rarely match), 'self' drafts with the "
+                         "two-model path; random-init unless --draft-ckpt "
+                         "serves distilled weights), 'self' drafts with the "
                          "target itself (the agreement ceiling)")
+    ap.add_argument("--draft-ckpt", default="",
+                    help="spec schedule only: a `launch.distill` checkpoint "
+                         "directory (the student/ subdir) with distilled "
+                         "shrink-drafter weights; vocab/width mismatches "
+                         "are rejected loudly at load")
+    ap.add_argument("--draft-branches", type=int, default=1,
+                    help="spec schedule only: sibling draft chains per lane "
+                         "(tree verification; branch at the window root on "
+                         "the drafter's top-N, one verify dispatch scores "
+                         "the whole tree)")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="slo schedule only: admit a queued request only "
                          "while the costmodel-predicted token latency stays "
@@ -117,6 +129,12 @@ def run(argv=None) -> dict:
     ap.add_argument("--prefix-block-size", type=int, default=8,
                     help="prefix cache only: tokens per block (should divide "
                          "the prefill buckets, or chains never anchor)")
+    ap.add_argument("--ckpt", default="",
+                    help="load target params from this CheckpointManager "
+                         "directory (e.g. a `launch.distill` run's teacher/ "
+                         "subdir, so a --draft-ckpt student speculates for "
+                         "the teacher it was distilled against) instead of "
+                         "random init")
     ap.add_argument("--sampling", default="greedy", choices=SAMPLING_MODES,
                     help="greedy argmax or seeded categorical sampling")
     ap.add_argument("--weight-form", default="fp16", choices=WEIGHT_FORMS,
@@ -141,6 +159,12 @@ def run(argv=None) -> dict:
     dispatcher = None if args.no_dispatch else KernelDispatcher(target)
     model = build_model(cfg, ParallelContext(mesh=None), dispatcher=dispatcher)
     params = model.init(jax.random.PRNGKey(args.seed))
+    if args.ckpt:
+        from repro.checkpoint.checkpoint import CheckpointManager
+        template = jax.eval_shape(model.init, jax.random.PRNGKey(args.seed))
+        params, step = CheckpointManager(args.ckpt).restore(template)
+        params = jax.tree.map(jax.numpy.asarray, params)
+        print(f"loaded target params from {args.ckpt} (step {step})")
     if args.weight_form != "fp16":
         params = compress_model_params(params, args.weight_form)
 
@@ -167,7 +191,9 @@ def run(argv=None) -> dict:
     elif args.schedule == "spec":
         stream = AsyncExecutionStream(program_cache, target=target,
                                       max_in_flight=args.max_in_flight)
-        extra = {"draft_depth": args.draft_depth, "draft": args.draft}
+        extra = {"draft_depth": args.draft_depth, "draft": args.draft,
+                 "draft_ckpt": args.draft_ckpt or None,
+                 "draft_branches": args.draft_branches}
     else:
         stream = ExecutionStream(program_cache, target=target)
     if args.prefix_cache:
@@ -225,8 +251,10 @@ def run(argv=None) -> dict:
                     f"pred p99 token "
                     f"{stats['predicted_token_latency_s']*1e3:.2f} ms")
     elif args.schedule == "spec":
-        slo_note = (f" | {args.draft} drafter depth {args.draft_depth}: "
-                    f"{stats['n_windows']} windows, acceptance "
+        trained = "distilled" if stats.get("drafter_trained") else "random"
+        slo_note = (f" | {args.draft} ({trained}) drafter depth "
+                    f"{args.draft_depth} x{stats['draft_branches']} "
+                    f"branches: {stats['n_windows']} windows, acceptance "
                     f"{stats['acceptance_rate']:.2f}, "
                     f"{stats['tokens_per_window_dispatch']:.2f} "
                     f"tok/window-dispatch")

@@ -33,6 +33,15 @@ that lever on the serving stack:
     scan step and the per-lane snapshot at the accept point is kept. The
     drafter's own caches are best-effort (proposals need no exactness): a
     rejection may dent its next proposals, never the emitted stream.
+  * **tree / multi-draft windows** (`--draft-branches N`) — the draft
+    dispatch proposes N sibling chains per lane (branching at the window
+    root on the drafter's top-N, branch 0 = the chain proposal) and ONE
+    verify dispatch scores the whole tree: the target's caches tile to
+    B*N rows inside the dispatch, the `specdec_tree` kernel picks the
+    branch with the longest accepted prefix per lane, and the rollback
+    keeps exactly the winner's accepted state. Same two floors per window,
+    N first-token guesses instead of one — more expected accepts per floor
+    when the drafter's top-1 is unsure but its top-N covers the target.
   * **floor accounting** — both the draft and the verify dispatch are
     encoded on `self.stream`: two floor-charged `DispatchRecord`s per window
     for up to K+1 emitted tokens. That is the honest §9 ledger the
@@ -106,6 +115,69 @@ def draft_of(cfg) -> Any:
     )
 
 
+def _validate_draft_params(model, dcfg, params) -> None:
+    """Reject drafter params that do not match `draft_of`'s config, loud:
+    a silently-wrong drafter would serve (proposals need no exactness) with
+    acceptance ~0 — precisely the regression the distillation fixes."""
+    ref = dict(model.named_leaves(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0))))
+    got = dict(model.named_leaves(params))
+    if set(ref) != set(got):
+        missing = sorted(set(ref) - set(got))[:4]
+        extra = sorted(set(got) - set(ref))[:4]
+        raise ValueError(
+            f"drafter params do not match the {dcfg.name!r} param tree: "
+            f"missing {missing}, unexpected {extra} — was this checkpoint "
+            f"distilled for a different arch or weight form?")
+    for path, ref_leaf in ref.items():
+        if tuple(got[path].shape) != tuple(ref_leaf.shape):
+            hint = (" (the drafter must share the target's vocab and "
+                    "widths — re-distill against this target)"
+                    if path.startswith("embed") else "")
+            raise ValueError(
+                f"drafter param {path!r} has shape "
+                f"{tuple(got[path].shape)}, draft config {dcfg.name!r} "
+                f"wants {tuple(ref_leaf.shape)}{hint}")
+
+
+def _load_draft_checkpoint(model, dcfg, cfg, path: str):
+    """Restore distilled drafter params from a `CheckpointManager`
+    directory, validating the metadata sidecar (vocab/width/arch) BEFORE
+    any array loads and the param tree after. A checkpoint saved with a
+    packed weight form restores into a `DispatchedWeight`-tagged template,
+    so the form tags round-trip intact."""
+    from repro.checkpoint.checkpoint import CheckpointManager
+    mgr = CheckpointManager(path)
+    if mgr.latest_step() is None:
+        raise FileNotFoundError(f"no committed drafter checkpoint in {path!r}")
+    meta = mgr.metadata() or {}
+    for key, want in (("vocab", cfg.vocab), ("d_model", cfg.d_model)):
+        got = meta.get(key)
+        if got is not None and int(got) != int(want):
+            raise ValueError(
+                f"drafter checkpoint {path!r} was distilled with "
+                f"{key}={got}, but the target {cfg.name!r} serves "
+                f"{key}={want}; speculative decoding shares the tokenizer "
+                f"and widths — re-distill against this target")
+    form = meta.get("weight_form", "fp16")
+    if form != "fp16":
+        from repro.optim.compression import compress_model_params
+        template = compress_model_params(
+            model.init(jax.random.PRNGKey(0)), form)
+    else:
+        template = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    try:
+        params, _ = mgr.restore(template)
+    except (KeyError, ValueError) as e:
+        raise ValueError(
+            f"drafter checkpoint {path!r} does not restore into the "
+            f"{dcfg.name!r} param tree: {e}") from None
+    params = jax.tree.map(jnp.asarray, params)
+    if form == "fp16":
+        _validate_draft_params(model, dcfg, params)
+    return params
+
+
 @dataclasses.dataclass
 class Drafter:
     """A draft model + params, served alongside the target.
@@ -119,20 +191,38 @@ class Drafter:
     params: Any
     cfg: Any
     kind: str = "shrink"
+    #: True when the params came from a distillation run (`params=`/`ckpt=`)
+    #: rather than random init — surfaced in stats so a bench/CI gate can
+    #: tell a real drafter from the acceptance-0 placebo
+    trained: bool = False
 
     @classmethod
-    def shrink(cls, cfg, *, dispatcher=None, seed: int = 0) -> "Drafter":
+    def shrink(cls, cfg, *, dispatcher=None, seed: int = 0, params=None,
+               ckpt: str | None = None) -> "Drafter":
+        """The depth-pruned two-model drafter. With neither `params` nor
+        `ckpt` the student is random-init (acceptance ~0: a placebo useful
+        only for rollback-path tests); `params=` serves distilled weights
+        directly, `ckpt=` restores them from a `launch.distill` checkpoint
+        directory — both validated loudly against `draft_of(cfg)`."""
+        if params is not None and ckpt is not None:
+            raise ValueError("pass params= or ckpt=, not both")
         dcfg = draft_of(cfg)
         model = build_model(dcfg, dispatcher=dispatcher)
-        params = model.init(jax.random.PRNGKey(seed + 1))
-        return cls(model, params, dcfg, kind="shrink")
+        trained = params is not None or ckpt is not None
+        if ckpt is not None:
+            params = _load_draft_checkpoint(model, dcfg, cfg, ckpt)
+        elif params is not None:
+            _validate_draft_params(model, dcfg, params)
+        else:
+            params = model.init(jax.random.PRNGKey(seed + 1))
+        return cls(model, params, dcfg, kind="shrink", trained=trained)
 
     @classmethod
     def self_draft(cls, model, params, cfg) -> "Drafter":
         """Draft with the target itself: proposals equal the target's picks
         by construction (accept-all) — the amortization ceiling, and the
         only aligned drafter when weights are random-init."""
-        return cls(model, params, cfg, kind="self")
+        return cls(model, params, cfg, kind="self", trained=True)
 
 
 DRAFT_KINDS = ("shrink", "self")
@@ -159,6 +249,10 @@ class SpeculativeSchedule(ContinuousSchedule):
 
     Each window emits `accept_len + 1` tokens per lane for exactly two
     floor-charged `DispatchRecord`s — the §9 economics the bench gates on.
+    With `draft_branches > 1` the same two dispatches carry a root-branched
+    tree of proposals per lane (`_draft_tree_program` /
+    `_verify_tree_program`) and the emitted stream is still the target
+    sampler's picks, token-exact against the sequential reference.
     """
 
     name = "spec"
@@ -169,7 +263,8 @@ class SpeculativeSchedule(ContinuousSchedule):
 
     def __init__(self, model, params, cfg, *, n_slots: int, max_len: int,
                  draft_depth: int = 4, draft: str = "shrink",
-                 drafter: Drafter | None = None,
+                 drafter: Drafter | None = None, draft_branches: int = 1,
+                 draft_ckpt: str | None = None,
                  max_in_flight: int = MAX_IN_FLIGHT,
                  stream=None, program_cache=None, target=None, **kw) -> None:
         if kw.get("prefix_cache"):
@@ -191,18 +286,29 @@ class SpeculativeSchedule(ContinuousSchedule):
                          target=target, **kw)
         if draft_depth < 1:
             raise ValueError(f"draft_depth must be >= 1, got {draft_depth}")
+        if draft_branches < 1:
+            raise ValueError(
+                f"draft_branches must be >= 1, got {draft_branches}")
         if drafter is None:
             if draft not in DRAFT_KINDS:
                 raise ValueError(f"draft {draft!r} not in {DRAFT_KINDS}")
-            drafter = (Drafter.self_draft(model, params, cfg)
-                       if draft == "self"
-                       else Drafter.shrink(cfg, dispatcher=model.dispatcher))
+            if draft == "self":
+                if draft_ckpt:
+                    raise ValueError(
+                        "draft_ckpt loads a distilled shrink drafter; the "
+                        "self drafter IS the target — drop --draft-ckpt or "
+                        "use --draft shrink")
+                drafter = Drafter.self_draft(model, params, cfg)
+            else:
+                drafter = Drafter.shrink(cfg, dispatcher=model.dispatcher,
+                                         ckpt=draft_ckpt or None)
         if drafter.cfg.vocab != cfg.vocab:
             raise ValueError(
                 f"drafter vocab {drafter.cfg.vocab} != target vocab "
                 f"{cfg.vocab}; speculative decoding shares the tokenizer")
         self.drafter = drafter
         self.draft_depth = draft_depth
+        self.draft_branches = draft_branches
         self.draft_caches = None
         self._min_ring = None     # resolved from the live caches, memoized
         self.n_windows = 0
@@ -350,6 +456,184 @@ class SpeculativeSchedule(ContinuousSchedule):
         compiled, key = self.cache.compile(
             fused, self.params, self.caches, tok, p0, drafts, rids,
             jit_kwargs={"donate_argnums": (1,)})
+        self._verify_keys.add(key)
+        hit = (compiled, key)
+        self._verify_memo[sig] = hit
+        return hit
+
+    def _draft_tree_program(self, tok, p0, rids, k: int):
+        """The multi-draft window: one dispatch proposes a TREE of `nbr`
+        sibling chains per lane instead of one. Branching happens at the
+        root — the drafter's top-`nbr` picks for the window's first
+        position (branch 0 is exactly the chain proposal, greedy or seeded)
+        — and each branch extends with the target sampler's rule, so the
+        tree is `nbr` independent chains sharing position 0's context. The drafter's
+        caches tile from B to B*nbr lanes inside the dispatch (lane b's
+        branches at rows b*nbr..b*nbr+nbr-1); the verify dispatch keeps the
+        winning branch's rows. The trailing contiguity step mirrors
+        `_draft_program`'s."""
+        nbr = self.draft_branches
+        sig = (k, nbr, tok.shape, p0.shape)
+        hit = self._draft_memo.get(sig)
+        if hit is not None:
+            return hit
+        model, vocab = self.drafter.model, self.cfg.vocab
+        mode, root = self.sampler.mode, self.sampler._root
+
+        def fused(params, caches, tok0, p0, rids):
+            # step 0 on the B un-tiled lanes: consume the window's first
+            # token, rank the drafter's next-token candidates
+            caches, lg = model.decode_step(params, caches, tok0, p0)
+            row = lg[:, -1, :vocab].astype(jnp.float32)
+            if mode != "greedy":
+                def perturb(rid, p, r):
+                    key = jax.random.fold_in(
+                        jax.random.fold_in(root, rid), p)
+                    return r + jax.random.gumbel(key, r.shape, r.dtype)
+                # gumbel-perturbed rows: branch 0 (the top-1) is exactly
+                # the seeded categorical draw the chain drafter proposes
+                row = jax.vmap(perturb)(rids, p0 + 1, row)
+            roots = jax.lax.top_k(row, nbr)[1].astype(jnp.int32)  # (B, nbr)
+            tiled = jax.tree.map(lambda l: jnp.repeat(l, nbr, axis=1),
+                                 caches)
+            tokt = roots.reshape(-1)[:, None]                # (B*nbr, 1)
+            p0t = jnp.repeat(p0, nbr)
+            ridt = jnp.repeat(rids, nbr)
+
+            def body(carry, i):
+                caches, tokb = carry
+                caches, lg = model.decode_step(params, caches, tokb,
+                                               p0t + 1 + i)
+                rowb = lg[:, -1, :vocab].astype(jnp.float32)
+                if mode == "greedy":
+                    prop = jnp.argmax(rowb, axis=-1).astype(jnp.int32)
+                else:
+                    def draw(rid, p, r):
+                        key = jax.random.fold_in(
+                            jax.random.fold_in(root, rid), p)
+                        return jax.random.categorical(key, r)
+                    prop = jax.vmap(draw)(ridt, p0t + i + 2, rowb) \
+                        .astype(jnp.int32)
+                return (caches, prop[:, None]), prop
+
+            # k steps: k-1 branch extensions + the contiguity step that
+            # consumes the last proposal (its own output is discarded)
+            (tiled, _), props = jax.lax.scan(body, (tiled, tokt),
+                                             jnp.arange(k))
+            ext = jnp.transpose(props[: k - 1])          # (B*nbr, k-1)
+            drafts = jnp.concatenate([tokt, ext], axis=1) \
+                .reshape(tok0.shape[0], nbr, k)
+            return tiled, drafts
+
+        # no donation: the drafter caches come in at B rows and leave tiled
+        # at B*nbr, so the input buffers are never reusable anyway
+        compiled, key = self.cache.compile(
+            fused, self.drafter.params, self.draft_caches, tok, p0, rids)
+        self._draft_keys.add(key)
+        hit = (compiled, key)
+        self._draft_memo[sig] = hit
+        return hit
+
+    def _verify_tree_program(self, dcaches_tiled, tok, p0, drafts, rids,
+                             k: int):
+        """One dispatch scores the WHOLE tree: the target's caches tile to
+        B*nbr rows, K+1 fused steps run every branch teacher-forced in the
+        tiled batch, the `specdec_tree` kernel picks the winning branch per
+        lane (max accepted prefix, first index on ties), and the rollback
+        keeps exactly the winning branch's accepted prefix — winning rows
+        selected from the tiled caches, then the same positional-save /
+        recurrent-snapshot restore as the chain verify. Accepted tokens are
+        the target sampler's picks, so equal-accept sibling branches carry
+        identical accepted prefixes and the emitted stream stays token-
+        exact against the sequential reference whichever branch wins."""
+        nbr = self.draft_branches
+        sig = (k, nbr, tok.shape, p0.shape)
+        hit = self._verify_memo.get(sig)
+        if hit is not None:
+            return hit
+        model, vocab = self.model, self.cfg.vocab
+        mode, root = self.sampler.mode, self.sampler._root
+        disp = self.model.dispatcher
+
+        def fused(params, caches, dcaches, tok0, p0, drafts, rids):
+            pairs, treedef = compat.tree_flatten_with_path(caches)
+            names = [_leaf_name(p) for p, _ in pairs]
+            pos_idx = [i for i, n in enumerate(names)
+                       if n in TIME_MERGE_LEAVES]
+            rec_idx = [i for i, n in enumerate(names)
+                       if n not in TIME_MERGE_LEAVES]
+
+            def slots_of(leaf):
+                size = leaf.shape[2]
+                return (p0[:, None] + 1 + jnp.arange(k)[None]) % size
+
+            def gather(leaf, slots):
+                idx = slots.reshape((1,) + slots.shape
+                                    + (1,) * (leaf.ndim - 3))
+                return jnp.take_along_axis(leaf, idx, axis=2)
+
+            # positional save happens BEFORE tiling (per lane): every
+            # branch clobbers the same (p0+1 .. p0+k) % S slots, and the
+            # restore target is the un-tiled winning row
+            saved = [gather(pairs[i][1], slots_of(pairs[i][1]))
+                     for i in pos_idx]
+            b = tok0.shape[0]
+            tiled = jax.tree.map(lambda l: jnp.repeat(l, nbr, axis=1),
+                                 caches)
+            tokt = jnp.repeat(tok0, nbr, axis=0)
+            p0t = jnp.repeat(p0, nbr)
+            ridt = jnp.repeat(rids, nbr)
+            dflat = drafts.reshape((b * nbr, k))
+
+            def body(carry, i):
+                caches, tokb = carry
+                caches, lg = model.decode_step(params, caches, tokb,
+                                               p0t + i)
+                row = lg[:, -1, :vocab].astype(jnp.float32)
+                nxt = jax.lax.dynamic_slice_in_dim(
+                    dflat, jnp.minimum(i, k - 1), 1, axis=1)
+                snaps = [jax.tree.flatten(caches)[0][j] for j in rec_idx]
+                return (caches, nxt), (row, snaps)
+
+            (tiled, _), (rows, snaps) = jax.lax.scan(
+                body, (tiled, tokt), jnp.arange(k + 1))
+            scores = jnp.transpose(rows, (1, 0, 2))      # (B*nbr, K+1, V)
+            positions = p0t[:, None] + 1 + jnp.arange(k + 1)[None]
+            scores = specdec_ops.seeded_scores(scores, root, ridt,
+                                               positions, mode)
+            samples, accept, branch = specdec_ops.verify_accept_tree(
+                scores.reshape((b, nbr, k + 1, scores.shape[-1])),
+                drafts, dispatcher=disp)
+            # keep each lane's winning branch row from the tiled caches
+            g = jnp.arange(b) * nbr + branch
+            leaves = [jnp.take(l, g, axis=1)
+                      for l in jax.tree.flatten(tiled)[0]]
+            for j, i in enumerate(rec_idx):
+                snap = jnp.take(snaps[j], g, axis=2)     # (K+1, stack, B, .)
+                idx = accept.reshape((1, 1, -1)
+                                     + (1,) * (snap.ndim - 3))
+                leaves[i] = jnp.take_along_axis(snap, idx, axis=0)[0]
+            rejected = (jnp.arange(1, k + 1)[None] > accept[:, None])
+            for j, i in enumerate(pos_idx):
+                leaf = leaves[i]
+                slots = slots_of(leaf)
+                cur = gather(leaf, slots)
+                m = rejected.reshape((1,) + rejected.shape
+                                     + (1,) * (leaf.ndim - 3))
+                vals = jnp.where(m, saved[j], cur)
+                barr = jnp.arange(leaf.shape[1])[:, None]
+                leaves[i] = leaf.at[:, barr, slots].set(vals)
+            # drafter caches: keep the winning branch's rows, best-effort
+            # (no rollback — a dented proposal context costs acceptance on
+            # the next window, never a token)
+            dsel = jax.tree.map(lambda l: jnp.take(l, g, axis=1), dcaches)
+            return treedef.unflatten(leaves), dsel, samples, accept
+
+        # donate the target caches only: the tiled drafter caches shrink
+        # back to B rows on the way out, so their buffers can't be reused
+        compiled, key = self.cache.compile(
+            fused, self.params, self.caches, dcaches_tiled, tok, p0,
+            drafts, rids, jit_kwargs={"donate_argnums": (1,)})
         self._verify_keys.add(key)
         hit = (compiled, key)
         self._verify_memo[sig] = hit
@@ -528,22 +812,39 @@ class SpeculativeSchedule(ContinuousSchedule):
         tokj = jnp.asarray(tok)
         p0j = jnp.asarray(p0)
         ridsj = jnp.asarray(rids)
-        if k > 0:
-            prog, dkey = self._draft_program(tokj, p0j, ridsj, k)
+        if k > 0 and self.draft_branches > 1:
+            # tree window: one draft dispatch proposes nbr sibling chains
+            # per lane, one verify dispatch scores the whole tree
+            prog, dkey = self._draft_tree_program(tokj, p0j, ridsj, k)
             self.stream.encode_operation(
                 prog, (self.drafter.params, self.draft_caches, tokj, p0j,
                        ridsj), dkey, batch=len(active))
-            # submit without blocking: the proposal tensor chains straight
-            # into the verify dispatch as a live async value
-            self.draft_caches, drafts = self.stream.submit()[0]
+            dtiled, drafts = self.stream.submit()[0]
             self.draft_steps += k + 1
+            prog, vkey = self._verify_tree_program(dtiled, tokj, p0j,
+                                                   drafts, ridsj, k)
+            self.stream.encode_operation(
+                prog, (self.params, self.caches, dtiled, tokj, p0j, drafts,
+                       ridsj), vkey, batch=len(active))
+            self.caches, self.draft_caches, samples, accept = \
+                self.stream.submit()[0]
         else:
-            drafts = jnp.zeros((n, 0), jnp.int32)
-        prog, vkey = self._verify_program(tokj, p0j, drafts, ridsj, k)
-        self.stream.encode_operation(
-            prog, (self.params, self.caches, tokj, p0j, drafts, ridsj),
-            vkey, batch=len(active))
-        self.caches, samples, accept = self.stream.submit()[0]
+            if k > 0:
+                prog, dkey = self._draft_program(tokj, p0j, ridsj, k)
+                self.stream.encode_operation(
+                    prog, (self.drafter.params, self.draft_caches, tokj,
+                           p0j, ridsj), dkey, batch=len(active))
+                # submit without blocking: the proposal tensor chains
+                # straight into the verify dispatch as a live async value
+                self.draft_caches, drafts = self.stream.submit()[0]
+                self.draft_steps += k + 1
+            else:
+                drafts = jnp.zeros((n, 0), jnp.int32)
+            prog, vkey = self._verify_program(tokj, p0j, drafts, ridsj, k)
+            self.stream.encode_operation(
+                prog, (self.params, self.caches, tokj, p0j, drafts, ridsj),
+                vkey, batch=len(active))
+            self.caches, samples, accept = self.stream.submit()[0]
         self.stream.sync()      # accept lengths are data: one sync per window
         samples = np.asarray(samples)
         accept = np.asarray(accept)
@@ -568,7 +869,11 @@ class SpeculativeSchedule(ContinuousSchedule):
     # -- reporting -----------------------------------------------------------
     @property
     def acceptance_rate(self) -> float:
-        return self.accepted / self.proposed if self.proposed else 1.0
+        """Accepted / proposed over the run; 0.0 when no window ever
+        proposed a draft (a zero-window run offers no evidence the drafter
+        works — reporting 1.0 here let a broken drafter masquerade as a
+        perfect one through short, fully-prefilled benchmarks)."""
+        return self.accepted / self.proposed if self.proposed else 0.0
 
     def stats(self, n_requests: int) -> dict:
         out = super().stats(n_requests)
@@ -577,7 +882,9 @@ class SpeculativeSchedule(ContinuousSchedule):
         verify_recs = sum(1 for r in recs if r.key in self._verify_keys)
         out.update({
             "draft_depth": self.draft_depth,
+            "draft_branches": self.draft_branches,
             "drafter": self.drafter.kind,
+            "drafter_trained": self.drafter.trained,
             "n_windows": self.n_windows,
             "draft_dispatches": draft_recs,
             "verify_dispatches": verify_recs,

@@ -35,14 +35,20 @@ from repro.runtime.fault_tolerance import RestartPolicy, Watchdog, run_with_rest
 
 
 def make_train_step(model, opt_cfg: adamw.AdamWConfig,
-                    grad_compression: str = "none"):
+                    grad_compression: str = "none", *, loss_fn=None):
     """The jitted step: loss -> grads -> (optional int8 error-feedback
     compression round-trip) -> AdamW. Donated state never re-crosses the
-    host."""
+    host.
+
+    `loss_fn(params, batch) -> (loss, metrics)` overrides `model.loss` —
+    the hook the distillation driver uses to train a student against
+    teacher logits through this exact step machinery (same compression,
+    same optimizer, same donation discipline)."""
+    loss_fn = model.loss if loss_fn is None else loss_fn
 
     def train_step(params, opt_state, batch):
         (loss, metrics), grads = jax.value_and_grad(
-            model.loss, has_aux=True)(params, batch)
+            loss_fn, has_aux=True)(params, batch)
         if grad_compression == "int8":
             comp, residual = compress_grads(grads, opt_state.get("residual"))
             grads = decompress_grads(comp, grads)

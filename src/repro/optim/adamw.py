@@ -27,12 +27,21 @@ class AdamWConfig:
     weight_decay: float = 0.1
     clip_norm: float = 1.0
     moment_dtype: str = "float32"     # "bfloat16" halves state memory
+    # "cosine" decays to min_lr_ratio * peak over total_steps; "constant"
+    # holds peak_lr after warmup — the right shape for short distillation
+    # runs whose step count is a budget, not a convergence horizon
+    schedule_kind: str = "cosine"
 
 
 def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
-    """Linear warmup then cosine to min_lr_ratio * peak."""
+    """Linear warmup, then cosine to min_lr_ratio * peak or constant peak."""
+    if cfg.schedule_kind not in ("cosine", "constant"):
+        raise ValueError(f"schedule_kind {cfg.schedule_kind!r} "
+                         f"not in ('cosine', 'constant')")
     step = step.astype(jnp.float32)
     warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    if cfg.schedule_kind == "constant":
+        return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr)
     prog = jnp.clip((step - cfg.warmup_steps)
                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
     cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))

@@ -1041,3 +1041,127 @@ def test_serve_cli_spec_schedule():
                                 "--draft-depth", "2"])
     np.testing.assert_array_equal(shr["tokens"], cont["tokens"])
     assert shr["acceptance_rate"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Tree / multi-draft verification (--draft-branches)
+# ---------------------------------------------------------------------------
+
+
+def test_tree_kernel_single_branch_matches_chain_bitwise():
+    """NBR=1 tree verify IS the chain kernel: samples and accept lengths
+    bit-for-bit identical, winning branch identically 0."""
+    from repro.kernels.specdec.specdec import (verify_accept_kernel,
+                                               verify_accept_tree_kernel)
+    rng = np.random.default_rng(3)
+    b, t, v = 4, 5, 300
+    scores = rng.normal(size=(b, t, v)).astype(np.float32)
+    picks = np.argmax(scores, -1)
+    draft = rng.integers(0, v, size=(b, t - 1)).astype(np.int32)
+    draft[0] = picks[0, :-1]                        # one accept-all lane
+    cs, ca = verify_accept_kernel(jnp.asarray(scores), jnp.asarray(draft))
+    ts_, ta, tb = verify_accept_tree_kernel(jnp.asarray(scores[:, None]),
+                                            jnp.asarray(draft[:, None]))
+    np.testing.assert_array_equal(np.asarray(cs), np.asarray(ts_))
+    np.testing.assert_array_equal(np.asarray(ca), np.asarray(ta))
+    np.testing.assert_array_equal(np.asarray(tb), np.zeros(b, np.int32))
+
+
+@pytest.mark.parametrize("draft", ["self", "shrink"])
+def test_spec_tree_greedy_parity(draft):
+    """branches=2 tree windows stay token-exact against the sequential
+    reference; branch 0 is exactly the chain proposal, so the self drafter
+    still accepts everything."""
+    sched = _check_parity("tinyllama-1.1b", "fp16", "spec", draft=draft,
+                          draft_depth=3, draft_branches=2)
+    assert sched.draft_branches == 2
+    if draft == "self":
+        assert sched.acceptance_rate == 1.0
+    else:       # random-init shrink: the winning-branch rollback really ran
+        assert sched.accepted < sched.proposed
+
+
+def test_spec_tree_categorical_schedule_invariance():
+    """Tree verify under seeded categorical sampling: the per-(rid, pos)
+    gumbel perturbation is shared by every sibling branch, so the emitted
+    stream is schedule-invariant whichever branch wins."""
+    seq, _ = _serve("sequential", "tinyllama-1.1b", "fp16", [10, 6], gen=4,
+                    sampling="categorical")
+    for draft in ("self", "shrink"):
+        spec, sched = _serve("spec", "tinyllama-1.1b", "fp16", [10, 6],
+                             gen=4, n_slots=2, sampling="categorical",
+                             draft=draft, draft_depth=3, draft_branches=2)
+        for rid in spec:
+            np.testing.assert_array_equal(spec[rid].tokens, seq[rid].tokens)
+        if draft == "self":
+            assert sched.acceptance_rate == 1.0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,form", SLOW_PARITY)
+def test_spec_tree_parity_sweep(arch, form):
+    """Tree windows under the rejection-heavy shrink drafter across the
+    arch x weight-form sweep: winning-branch selection plus rollback must
+    keep the recurrent families (SSM state, RG-LRU, ring KV) bit-exact."""
+    _check_parity(arch, form, "spec", draft="shrink", draft_depth=3,
+                  draft_branches=2)
+
+
+def test_spec_tree_two_floors_per_window():
+    """A tree window is still exactly two floor-charged dispatches — the
+    whole B*branches tile rides inside them."""
+    _, sched = _serve("spec", "tinyllama-1.1b", "fp16", [16, 16], gen=10,
+                      n_slots=2, draft="self", draft_depth=4,
+                      draft_branches=2)
+    recs = sched.stream.records
+    draft_recs = [r for r in recs if r.key in sched._draft_keys]
+    verify_recs = [r for r in recs if r.key in sched._verify_keys]
+    assert len(verify_recs) == sched.n_windows == 2
+    assert len(draft_recs) == 2
+    for r in draft_recs + verify_recs:
+        assert r.floor_s == V5E.dispatch_floor_s > 0.0
+    st = sched.stats(2)
+    assert st["draft_branches"] == 2
+    assert st["drafter_trained"] is True           # self drafter
+    assert st["emitted_tokens"] == 18
+
+
+def test_spec_zero_window_stats_guard():
+    """gen=1 on fully-prefilled prompts: every request finishes on its
+    admission sample, no window ever runs. proposed == 0 must report
+    acceptance 0.0 — not a fake-perfect 1.0 — and every stat stays finite."""
+    spec, sched = _serve("spec", "tinyllama-1.1b", "fp16", [16, 16], gen=1,
+                         n_slots=2, draft="shrink", draft_depth=4)
+    seq, _ = _serve("sequential", "tinyllama-1.1b", "fp16", [16, 16], gen=1)
+    for rid in spec:
+        np.testing.assert_array_equal(spec[rid].tokens, seq[rid].tokens)
+    assert sched.proposed == 0 and sched.n_windows == 0
+    assert sched.acceptance_rate == 0.0
+    st = sched.stats(2)
+    assert st["drafter_trained"] is False          # random-init shrink
+    for k, v in st.items():
+        if isinstance(v, float):
+            assert np.isfinite(v), (k, v)
+
+
+def test_spec_tree_rejects_bad_setups():
+    cfg, model, params = _served_model("tinyllama-1.1b", "fp16")
+    with pytest.raises(ValueError, match="draft_branches"):
+        SpeculativeSchedule(model, params, cfg, n_slots=1, max_len=16,
+                            draft_branches=0)
+    with pytest.raises(ValueError, match="draft_ckpt"):
+        SpeculativeSchedule(model, params, cfg, n_slots=1, max_len=16,
+                            draft="self", draft_ckpt="/nope")
+
+
+def test_serve_cli_spec_tree_round_trip():
+    """`--schedule spec --draft-branches 2` end to end through the CLI:
+    identical greedy tokens to the continuous run, accept-all self drafter."""
+    argv = ["--smoke", "--batch", "2", "--prompt-len", "8", "--gen", "6",
+            "--sampling", "greedy", "--requests", "1"]
+    cont = serve_mod.run(argv + ["--schedule", "continuous"])
+    out = serve_mod.run(argv + ["--schedule", "spec", "--draft", "self",
+                                "--draft-depth", "2",
+                                "--draft-branches", "2"])
+    np.testing.assert_array_equal(out["tokens"], cont["tokens"])
+    assert out["acceptance_rate"] == 1.0

@@ -154,3 +154,169 @@ def test_serve_greedy_matches_decode_parity_source():
     lg_full = logits_fn(cfg, params["embed"], h)[:, -1]
     np.testing.assert_allclose(np.asarray(lg2[:, 0]), np.asarray(lg_full),
                                rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Distillation tier: the drafter that makes speculation win (launch.distill)
+# ---------------------------------------------------------------------------
+
+import functools  # noqa: E402
+
+
+@functools.lru_cache(maxsize=1)
+def _distill_bundle():
+    """One small teacher-train + distill run shared by the tier (same knobs
+    as the bench's --fast inline pipeline)."""
+    from repro.launch import distill as distill_mod
+    cfg = configs.get_smoke("tinyllama-1.1b")
+    out = distill_mod.distill_pipeline(
+        cfg, teacher_steps=60, steps=80, batch=8, seq=48, lr=3e-3,
+        kl_weight=0.75, temperature=1.0, seed=0, eval_steps=8, log_every=40)
+    return cfg, out
+
+
+def _collect_weight_forms(node, acc):
+    from repro.models.dispatched import DispatchedWeight
+    if isinstance(node, DispatchedWeight):
+        acc.append(node.form.value)
+    elif isinstance(node, dict):
+        for v in node.values():
+            _collect_weight_forms(v, acc)
+    elif isinstance(node, (list, tuple)):
+        for v in node:
+            _collect_weight_forms(v, acc)
+    return acc
+
+
+@pytest.mark.slow
+def test_distill_loss_decreases_and_tracks_teacher():
+    """The KL+CE distillation loss strictly decreases through the shared
+    train-step machinery, and the student's held-out teacher-rollout
+    agreement lands far above chance (= the quantity speculative
+    acceptance tracks)."""
+    cfg, out = _distill_bundle()
+    hist = out["history"]
+    assert len(hist) >= 2
+    assert hist[-1] < hist[0], hist
+    assert np.isfinite(hist[-1])
+    assert out["agreement"] >= 0.6, out["agreement"]
+
+
+@pytest.mark.slow
+def test_distilled_drafter_beats_random_acceptance():
+    """Through the REAL SpeculativeSchedule on held-out motif prompts: the
+    distilled student clears the bench's acceptance bar, the random-init
+    placebo does not (the regression this tier exists to pin)."""
+    from repro.core import hal
+    from repro.core.dispatch import (AsyncExecutionStream, KernelDispatcher,
+                                     ProgramCache)
+    from repro.launch.scheduler import Request
+    from repro.launch.speculative import Drafter, SpeculativeSchedule
+
+    cfg, out = _distill_bundle()
+    target = hal.get_target("tpu-v5e")
+    model = build_model(cfg, dispatcher=KernelDispatcher(target))
+    tparams = out["teacher_params"]
+    n, plen, gen = 6, 24, 8
+    src = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=plen,
+                                 global_batch=n, seed=21))
+    toks = src.prompt_batch(0, n, plen)
+
+    def acceptance(drafter):
+        sched = SpeculativeSchedule(
+            model, tparams, cfg, n_slots=n, max_len=plen + gen,
+            sampling="greedy", seed=0, draft_depth=2, drafter=drafter,
+            stream=AsyncExecutionStream(ProgramCache(), target=target))
+        sched.run([Request(rid=i, prompt=np.asarray(toks[i], np.int32),
+                           max_new_tokens=gen) for i in range(n)])
+        assert sched.proposed > 0
+        return sched.acceptance_rate
+
+    trained = acceptance(Drafter.shrink(cfg, dispatcher=model.dispatcher,
+                                        params=out["student_params"]))
+    random = acceptance(Drafter.shrink(cfg, dispatcher=model.dispatcher))
+    assert trained >= 0.4, (trained, random)
+    assert trained > random, (trained, random)
+
+
+@pytest.mark.slow
+def test_distill_cli_checkpoint_roundtrip(tmp_path):
+    """The CLI writes teacher/ and student/ checkpoints with metadata
+    sidecars; `Drafter.shrink(ckpt=...)` restores the student and rejects
+    a mismatched target config loudly."""
+    from repro.launch import distill as distill_mod
+    from repro.launch.speculative import Drafter
+
+    d = str(tmp_path / "distill")
+    out = distill_mod.run(["--arch", "tinyllama-1.1b", "--smoke",
+                           "--teacher-steps", "40", "--steps", "50",
+                           "--seq", "32", "--log-every", "25",
+                           "--ckpt-dir", d])
+    assert out["loss_history"][-1] < out["loss_history"][0]
+
+    cfg = configs.get_smoke("tinyllama-1.1b")
+    meta = CheckpointManager(os.path.join(d, "student")).metadata()
+    assert meta["role"] == "draft-student"
+    assert meta["vocab"] == cfg.vocab
+    assert meta["target_arch"] == cfg.name
+    assert 0.0 <= meta["agreement_top1"] <= 1.0
+    drafter = Drafter.shrink(cfg, ckpt=os.path.join(d, "student"))
+    assert drafter.trained
+    assert drafter.cfg.vocab == cfg.vocab
+
+    # the full (non-smoke) config serves a different vocab: rejected before
+    # any array loads
+    with pytest.raises(ValueError, match="vocab"):
+        Drafter.shrink(configs.get_config("tinyllama-1.1b"),
+                       ckpt=os.path.join(d, "student"))
+    # a missing checkpoint directory is loud too
+    with pytest.raises(FileNotFoundError):
+        Drafter.shrink(cfg, ckpt=str(tmp_path / "nope"))
+
+
+@pytest.mark.slow
+def test_drafter_params_route_rejects_mismatch():
+    """`Drafter.shrink(params=...)` validates the tree loudly: a missing
+    subtree and a wrong-shape embed both name the problem."""
+    from repro.launch.speculative import Drafter
+
+    cfg, out = _distill_bundle()
+    good = out["student_params"]
+    drafter = Drafter.shrink(cfg, params=good)
+    assert drafter.trained
+
+    bad = {k: v for k, v in good.items() if k != "embed"}
+    with pytest.raises(ValueError, match="param tree"):
+        Drafter.shrink(cfg, params=bad)
+
+    clipped = dict(good, embed=jax.tree.map(
+        lambda x: np.asarray(x)[..., :-1], good["embed"]))
+    with pytest.raises(ValueError, match="vocab|shape"):
+        Drafter.shrink(cfg, params=clipped)
+
+
+@pytest.mark.slow
+def test_packed_student_checkpoint_roundtrips_form_tags(tmp_path):
+    """A student checkpoint saved in a packed weight form restores through
+    `Drafter.shrink(ckpt=...)` with its `DispatchedWeight` form tags intact
+    (no silent fold to dense)."""
+    from repro.core import hal
+    from repro.core.dispatch import KernelDispatcher
+    from repro.launch import distill as distill_mod
+    from repro.launch.speculative import Drafter
+    from repro.optim.compression import compress_model_params
+
+    cfg, out = _distill_bundle()
+    packed = compress_model_params(out["student_params"], "int4_palette")
+    d = str(tmp_path / "student")
+    CheckpointManager(d).save(
+        1, packed, metadata=distill_mod._metadata(
+            out["student_cfg"], "draft-student",
+            weight_form="int4_palette", target_arch=cfg.name))
+
+    drafter = Drafter.shrink(
+        cfg, dispatcher=KernelDispatcher(hal.get_target("tpu-v5e")), ckpt=d)
+    assert drafter.trained
+    forms = _collect_weight_forms(drafter.params, [])
+    assert forms, "no DispatchedWeight nodes survived the round-trip"
+    assert all(f == "int4_palette" for f in forms), set(forms)
