@@ -1,0 +1,207 @@
+"""EP-sharded multi-host serving bench (DESIGN.md §5 on the serve stack).
+
+    PYTHONPATH=src python -m benchmarks.bench_sharded_serve [--fast]
+
+Serving shards differently than training: params stay replicated EXCEPT the
+packed MoE expert banks (EP over the "model" axis — the only placement that
+keeps greedy token streams bit-identical, since TP would reorder the psum
+reductions), and the decode lanes (the batch dim of the shared KV cache)
+shard over the batch axes — each "host" is one batch-axis rank with its
+model-axis device column co-located. This bench proves, on 8 virtual CPU
+devices (`--xla_force_host_platform_device_count=8`, set at import), the
+three claims the ISSUE gates:
+
+  * **bit-identical streams** — the same request round served single-device
+    and on a `4x2` ("data","model") mesh must produce byte-equal greedy
+    token matrices, for (continuous, slo) x (fp16, int4_palette), with the
+    SAME dispatch count: SPMD means every host dispatches every program, so
+    the per-host ledger is unchanged and the fleet pays
+    `n_hosts x floor_s` — that identity is gated exactly.
+  * **EP actually routes** — a packed (int4_palette) dbrx MoE served on a
+    `2x4` mesh with 8 lanes must take the `shard_map` expert-parallel path:
+    `repro.models.moe.ROUTE_COUNTS["ep"]` must tick during the serve
+    trace, and a direct prefill of the same packed params on and off the
+    mesh must agree to float tolerance (1e-4). The EP combine legitimately
+    reorders the expert reduction, so MoE logits match to ~1e-7, not
+    bitwise — greedy argmax on a random-init smoke model can flip on that,
+    which is why this leg reports (never gates) token agreement. (The
+    batch-1 bucketed prefill stays on the dense path by design — only the
+    decode batch clears the tokens-divisibility gate.)
+  * **evacuation is token-exact** — a mid-stream host loss (injected
+    vanish at a decode tick, and a watchdog-caught hang in the full run)
+    must evacuate the failed host's lanes through the ServeSupervisor:
+    mesh shrinks `4x2 -> 3x2` over the survivors, the interrupted lanes
+    re-admit with their generated prefix teacher-forced, and the final
+    token matrix is byte-equal to the uninterrupted single-device run,
+    with exactly one restart and one rescale in the ledger.
+
+Wall clocks are reported, never gated (host-CPU shard_map overhead is not
+accelerator performance — DESIGN.md evidence marks). Writes
+`BENCH_shard.json`; exits nonzero on any violated gate. `--fast` keeps one
+parity pair, the EP leg and the vanish evacuation (the CI matrix leg).
+"""
+
+from __future__ import annotations
+
+import os
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = f"{os.environ.get('XLA_FLAGS', '')} {_FLAG}".strip()
+
+import argparse  # noqa: E402
+import sys       # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.models.moe import ROUTE_COUNTS          # noqa: E402
+from repro.launch.serve import run as serve_run    # noqa: E402
+
+from benchmarks._common import emit_report, gate   # noqa: E402
+
+#: parity matrix: every (schedule, weight form) pair must stream
+#: bit-identically on and off the mesh
+PARITY_LEGS = (("continuous", "fp16"), ("slo", "fp16"),
+               ("continuous", "int4_palette"), ("slo", "int4_palette"))
+MESH = "4x2"          # lanes over data=4, expert banks over model=2
+EP_MESH = "2x4"       # dbrx smoke: 4 experts % model=4 == 0, 8 lanes % 8 == 0
+
+
+def _argv(arch, schedule, form, batch, plen, gen, *extra):
+    return ["--arch", arch, "--smoke", "--schedule", schedule,
+            "--weight-form", form, "--batch", str(batch),
+            "--prompt-len", str(plen), "--gen", str(gen),
+            "--sampling", "greedy", *extra]
+
+
+def _row(tag, out):
+    row = {"tag": tag, "wall_s": round(out["wall_s"], 4),
+           "tok_per_s": round(out["tok_per_s"], 2),
+           "n_dispatches": out["n_dispatches"]}
+    for k in ("mesh_axes", "n_hosts", "per_host_floor_s", "fleet_floor_s",
+              "restarts", "evacuated_rids"):
+        if k in out:
+            row[k] = out[k]
+    if "rescales" in out:
+        row["rescales"] = [r["new_mesh_shape"] for r in out["rescales"]]
+    return row
+
+
+def _ep_logits_err() -> float:
+    """Max |logits| gap between a packed dbrx prefill on the EP mesh and
+    the same params single-device: 8x8 tokens clears the EP divisibility
+    gate, so this is the shard_map path against the dense loop."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.core import hal
+    from repro.core.dispatch import KernelDispatcher
+    from repro.launch.serve import parse_mesh
+    from repro.models.model import build_model
+    from repro.optim.compression import compress_model_params
+    from repro.parallel.ctx import ParallelContext
+
+    cfg = configs.get_smoke("dbrx-132b")
+    dispatcher = KernelDispatcher(hal.get_target("tpu-v5e"))
+    ref = build_model(cfg, ParallelContext(mesh=None), dispatcher=dispatcher)
+    meshed = build_model(cfg, parse_mesh(EP_MESH), dispatcher=dispatcher)
+    params = compress_model_params(ref.init(jax.random.PRNGKey(0)),
+                                   "int4_palette")
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(8, 8)), jnp.int32)}
+    before = ROUTE_COUNTS["ep"]
+    _, lg_mesh = meshed.prefill(params, batch)
+    assert ROUTE_COUNTS["ep"] > before, "prefill never took the EP path"
+    _, lg_ref = ref.prefill(params, batch)
+    return float(jnp.max(jnp.abs(lg_mesh - lg_ref)))
+
+
+def bench(fast: bool):
+    failures, rows = [], []
+    arch, batch, plen, gen = "tinyllama-1.1b", 4, 12, 8
+    legs = PARITY_LEGS[:1] if fast else PARITY_LEGS
+
+    for schedule, form in legs:
+        tag = f"{schedule}/{form}"
+        single = serve_run(_argv(arch, schedule, form, batch, plen, gen))
+        mesh = serve_run(_argv(arch, schedule, form, batch, plen, gen,
+                               "--mesh-shape", MESH))
+        rows += [_row(f"{tag} single", single), _row(f"{tag} mesh", mesh)]
+        if not np.array_equal(single["tokens"], mesh["tokens"]):
+            failures.append(f"{tag}: mesh {MESH} streams diverge from "
+                            "single-device")
+        if single["n_dispatches"] != mesh["n_dispatches"]:
+            failures.append(
+                f"{tag}: dispatch count {mesh['n_dispatches']} on mesh vs "
+                f"{single['n_dispatches']} single — the per-host ledger "
+                "must be placement-invariant")
+        fleet = mesh["fleet_floor_s"]
+        want = mesh["n_hosts"] * mesh["per_host_floor_s"]
+        if abs(fleet - want) > 1e-12:
+            failures.append(f"{tag}: fleet floor {fleet} != n_hosts x "
+                            f"per-host floor {want}")
+
+    # --- EP routing proof: packed dbrx banks through shard_map ----------
+    ep_args = ("dbrx-132b", "continuous", "int4_palette", 8, 8, 4)
+    single = serve_run(_argv(*ep_args))
+    ROUTE_COUNTS["ep"] = ROUTE_COUNTS["dense"] = 0
+    mesh = serve_run(_argv(*ep_args, "--mesh-shape", EP_MESH))
+    ep_traces = ROUTE_COUNTS["ep"]
+    agree = float(np.mean(single["tokens"] == mesh["tokens"]))
+    rows += [_row("ep/dbrx single", single),
+             dict(_row("ep/dbrx mesh", mesh), ep_traces=ep_traces,
+                  dense_traces=ROUTE_COUNTS["dense"],
+                  token_agreement=round(agree, 3))]
+    if ep_traces < 1:
+        failures.append(f"dbrx on mesh {EP_MESH}: packed MoE never traced "
+                        "the shard_map EP path (ROUTE_COUNTS['ep'] == 0)")
+    err = _ep_logits_err()
+    rows.append({"tag": "ep/dbrx prefill logits", "max_abs_err": err})
+    if not err < 1e-4:
+        failures.append(f"dbrx EP prefill logits off by {err} vs "
+                        "single-device (want < 1e-4)")
+
+    # --- evacuation round-trip -----------------------------------------
+    evac_legs = [("continuous", "vanish", 1, 3)]
+    if not fast:
+        evac_legs.append(("slo", "hang", 2, 2))
+    ref = serve_run(_argv(arch, "continuous", "fp16", batch, plen, gen))
+    for schedule, kind, host, at_step in evac_legs:
+        if schedule != "continuous":
+            ref = serve_run(_argv(arch, schedule, "fp16", batch, plen, gen))
+        out = serve_run(_argv(arch, schedule, "fp16", batch, plen, gen,
+                              "--mesh-shape", MESH,
+                              "--fail-host", str(host),
+                              "--fail-at-step", str(at_step),
+                              "--fail-kind", kind))
+        tag = f"evac/{schedule}/{kind}"
+        rows.append(_row(tag, out))
+        if not np.array_equal(ref["tokens"], out["tokens"]):
+            failures.append(f"{tag}: evacuated streams diverge from the "
+                            "uninterrupted run")
+        if out["restarts"] != 1 or len(out["rescales"]) != 1:
+            failures.append(f"{tag}: expected exactly 1 restart + 1 "
+                            f"rescale, got {out['restarts']} / "
+                            f"{len(out['rescales'])}")
+        if out["n_hosts"] != 3:
+            failures.append(f"{tag}: survivor fleet has {out['n_hosts']} "
+                            "hosts, want 3")
+    return rows, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="one parity pair + EP + vanish evacuation (CI)")
+    ap.add_argument("--out", default="BENCH_shard.json")
+    args = ap.parse_args(argv)
+    rows, failures = bench(args.fast)
+    emit_report({"mesh": MESH, "ep_mesh": EP_MESH, "fast": args.fast,
+                 "rows": rows, "failures": failures}, args.out)
+    return gate(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -85,6 +85,7 @@ class _Block:
     children: int = 0             # resident child nodes
     anchored: bool = False        # a prefill ended exactly at this boundary
     anchor: dict | None = None    # non-paged leaf snapshot at the boundary
+    depth: int = 1                # chain length in blocks, this one included
 
     @property
     def refcount(self) -> int:
@@ -103,13 +104,22 @@ class PagedKVPool:
     and floor-charged — through the ExecutionStream like everything else.
     """
 
-    def __init__(self, n_blocks: int, block_size: int) -> None:
+    def __init__(self, n_blocks: int, block_size: int, *,
+                 evict_cost_fn=None) -> None:
         if n_blocks < 1:
             raise ValueError(f"pool needs n_blocks >= 1, got {n_blocks}")
         if block_size < 1:
             raise ValueError(f"pool needs block_size >= 1, got {block_size}")
         self.n_blocks = n_blocks
         self.block_size = block_size
+        # Costmodel-aware eviction: `evict_cost_fn(n_tokens) -> float` is
+        # the modeled cost of re-prefilling a `n_tokens`-deep prefix (the
+        # scheduler wires its §9 floor+work estimate in). When set, the
+        # eviction victim is the refcount-0 block whose chain is cheapest
+        # to rebuild, not merely the least-recently-used; only leaves of
+        # the resident trie are ever refcount-0, so this preferentially
+        # keeps the deep (expensive) chains hot. None keeps plain LRU.
+        self.evict_cost_fn = evict_cost_fn
         self._free: list[int] = list(range(n_blocks - 1, -1, -1))
         self._nodes: dict[str, _Block] = {}
         self._lru: OrderedDict[str, None] = OrderedDict()
@@ -154,19 +164,37 @@ class PagedKVPool:
             return True
         return False
 
-    def _alloc_bid(self) -> int | None:
-        """A free arena row, evicting the LRU refcount-0 block if needed.
-        None when every block is referenced (pool full, caller skips)."""
-        if self._free:
-            return self._free.pop()
-        while self._lru:
-            key, _ = self._lru.popitem(last=False)
+    def _evict_victim(self) -> _Block | None:
+        """The refcount-0 block the next allocation evicts: the LRU-oldest
+        by default, or — with `evict_cost_fn` set — the one whose chain's
+        re-prefill cost (`cost_fn(depth * block_size)`) is cheapest, LRU
+        order breaking ties. Stale LRU entries are pruned either way."""
+        best: _Block | None = None
+        best_cost = 0.0
+        for key in list(self._lru):
             node = self._nodes.get(key)
             if node is None or node.refcount:
-                continue            # stale LRU entry
-            self._evict(node)
+                self._lru.pop(key, None)    # stale entry
+                continue
+            if self.evict_cost_fn is None:
+                return node                 # oldest valid = plain LRU
+            cost = float(self.evict_cost_fn(node.depth * self.block_size))
+            if best is None or cost < best_cost:
+                best, best_cost = node, cost
+        return best
+
+    def _alloc_bid(self) -> int | None:
+        """A free arena row, evicting a refcount-0 block if needed (see
+        `_evict_victim` for the policy). None when every block is
+        referenced (pool full, caller skips)."""
+        if self._free:
             return self._free.pop()
-        return None
+        victim = self._evict_victim()
+        if victim is None:
+            return None
+        self._lru.pop(victim.key, None)
+        self._evict(victim)
+        return self._free.pop()
 
     def _evict(self, node: _Block) -> None:
         del self._nodes[node.key]
@@ -272,7 +300,9 @@ class PagedKVPool:
                 raise AssertionError(
                     f"copy-on-write aliased shared block {old.key[:8]}")
             node = _Block(key=new_key, parent=parent, bid=bid,
-                          tokens=block_tokens.copy())
+                          tokens=block_tokens.copy(),
+                          depth=(self._nodes[parent].depth + 1
+                                 if parent is not None else 1))
             self._nodes[new_key] = node
             if parent is not None:
                 pnode = self._nodes[parent]
@@ -318,7 +348,7 @@ class PagedKVPool:
                             self._lru[pnode.key] = None
                     break
                 node = _Block(key=key, parent=parent, bid=bid,
-                              tokens=blk.copy())
+                              tokens=blk.copy(), depth=i + 1)
                 self._nodes[key] = node
                 self._lru[key] = None      # refcount 0: resident, evictable
                 self.stats["inserted_blocks"] += 1
@@ -399,6 +429,12 @@ class PagedKVPool:
             if node.refcount == 0:
                 assert node.key in self._lru, \
                     f"free block {node.key[:8]} missing from the LRU list"
+        for node in self._nodes.values():
+            want = 1 if node.parent is None \
+                else self._nodes[node.parent].depth + 1
+            assert node.depth == want, \
+                (f"block {node.key[:8]}: depth {node.depth} != chain "
+                 f"length {want}")
 
     # -- device arenas ------------------------------------------------------
     def bind(self, dec_caches, *, max_len: int) -> None:

@@ -58,14 +58,18 @@ from typing import Any, Iterable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
-from repro.core import hal
+from repro.configs.base import ShapeConfig
+from repro.core import costmodel, hal
 from repro.core.dispatch import (AsyncExecutionStream, ExecutionStream,
                                  ProgramCache)
 from repro.kernels import compat
 # TIME_MERGE_LEAVES historically lived here; the pool module owns the leaf
 # taxonomy now and this re-export keeps existing imports working.
 from repro.launch.kv_pool import PagedKVPool, TIME_MERGE_LEAVES  # noqa: F401
+from repro.parallel import sharding as shard_rules
+from repro.parallel.ctx import ParallelContext
 
 
 # ---------------------------------------------------------------------------
@@ -297,9 +301,9 @@ class _SchedulerBase:
                  sampling: str = "greedy", seed: int = 0,
                  program_cache: ProgramCache | None = None,
                  stream: ExecutionStream | None = None,
-                 target: hal.Target | None = None) -> None:
+                 target: hal.Target | None = None,
+                 ctx: ParallelContext | None = None) -> None:
         self.model = model
-        self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.buckets = tuple(sorted(buckets)) if buckets else \
@@ -307,10 +311,52 @@ class _SchedulerBase:
         self.stream = stream or ExecutionStream(program_cache, target=target)
         self.cache = program_cache or self.stream.cache
         self.sampler = TokenSampler(sampling, cfg.vocab, seed)
+        # Mesh serving: lanes span hosts over the batch axes, params
+        # replicate except EP expert banks (serve_param_specs) — the
+        # placement that keeps every token stream bit-identical to the
+        # single-device path while the floor ledger stays per-dispatch
+        # truthful (one SPMD program per tick, same dispatch count).
+        self.ctx = ctx if ctx is not None else ParallelContext(mesh=None)
+        # ProgramCache content hashes ignore shardings; the mesh descriptor
+        # rides the `options` field so a mesh program can never collide with
+        # a single-device program of identical shapes.
+        self._copts = "" if not self.ctx.active else "mesh=" + "x".join(
+            f"{a}{self.ctx.axis_size(a)}" for a in self.ctx.axis_names)
+        if self.ctx.active:
+            params = self._place(params,
+                                 shard_rules.serve_param_specs(params,
+                                                               self.ctx))
+        self.params = params
+        # called as step_hook(self, step) at the top of every serve-loop
+        # tick; the elastic supervisor hangs heartbeat/failure checks here
+        self.step_hook = None
+        # run() aliases its live queue/results lists here so a supervisor
+        # can read scheduler progress after an aborted run
+        self._queue: list[Request] = []
+        self._results: list[RequestResult] = []
         # decode-program handle per (token, pos) shape: the per-token hot
         # path must not re-flatten the whole (params, caches) pytree for a
         # ProgramCache key on every step (the warm start is free here)
         self._decode_memo: dict = {}
+
+    # -- mesh placement -----------------------------------------------------
+    def _place(self, tree, specs):
+        """device_put every leaf to its NamedSharding; `specs` mirrors
+        `tree` (DispatchedWeight nodes carry spec payloads)."""
+        mesh = self.ctx.mesh
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+            tree, specs)
+
+    def _batch_put(self, x):
+        """Host batch array -> device, lane dim sharded over the batch axes
+        when divisible (replicated otherwise) — `batch_specs`, applied to
+        the scheduler's token/position frames."""
+        xj = jnp.asarray(x)
+        if not self.ctx.active:
+            return xj
+        spec = shard_rules.batch_specs(xj, self.ctx)
+        return jax.device_put(xj, NamedSharding(self.ctx.mesh, spec))
 
     # -- programs -----------------------------------------------------------
     def _prefill_batch(self, tokens: np.ndarray,
@@ -325,7 +371,7 @@ class _SchedulerBase:
 
     def _prefill_program(self, batch: dict):
         compiled, key = self.cache.compile(self.model.prefill, self.params,
-                                           batch)
+                                           batch, options=self._copts)
         return compiled, key
 
     def _decode_program(self, caches, tok, pos):
@@ -338,7 +384,7 @@ class _SchedulerBase:
             return hit
         compiled, key = self.cache.compile(
             self.model.decode_step, self.params, caches, tok, pos,
-            jit_kwargs={"donate_argnums": (1,)})
+            options=self._copts, jit_kwargs={"donate_argnums": (1,)})
         self._decode_memo[sig] = (compiled, key)
         return compiled, key
 
@@ -359,7 +405,7 @@ class _SchedulerBase:
     def stats(self, n_requests: int) -> dict:
         recs = self.stream.records
         n = max(n_requests, 1)
-        return {
+        out = {
             "n_dispatches": len(recs),
             "floor_s": self.stream.total_floor_s(),
             "work_s": self.stream.total_work_s(),
@@ -367,6 +413,23 @@ class _SchedulerBase:
             "per_request_dispatch_overhead_s": self.stream.total_floor_s() / n,
             "per_request_dispatches": len(recs) / n,
         }
+        if self.ctx.active:
+            # SPMD: every host issues the same command sequence, so each
+            # batch-axis rank (one "host": its model ranks are co-located
+            # engine slices) pays the full per-dispatch floor — the fleet
+            # floor is hosts x the ledger, an identity the sharded-serve
+            # bench gates.
+            n_hosts = 1
+            for a in self.ctx.batch_axes:
+                n_hosts *= self.ctx.axis_size(a)
+            out.update({
+                "mesh_axes": {a: self.ctx.axis_size(a)
+                              for a in self.ctx.axis_names},
+                "n_hosts": n_hosts,
+                "per_host_floor_s": out["floor_s"],
+                "fleet_floor_s": out["floor_s"] * n_hosts,
+            })
+        return out
 
 
 class SequentialSchedule(_SchedulerBase):
@@ -424,7 +487,8 @@ class ContinuousSchedule(_SchedulerBase):
 
     def __init__(self, model, params, cfg, *, n_slots: int, max_len: int,
                  prefix_cache: bool = False, prefix_blocks: int = 64,
-                 prefix_block_size: int = 8, **kw) -> None:
+                 prefix_block_size: int = 8,
+                 prefix_pool: PagedKVPool | None = None, **kw) -> None:
         super().__init__(model, params, cfg, max_len=max_len, **kw)
         if n_slots < 1:
             raise ValueError(f"continuous schedule needs n_slots >= 1, "
@@ -433,13 +497,18 @@ class ContinuousSchedule(_SchedulerBase):
         self.slots = [_Slot() for _ in range(n_slots)]
         self.caches = None        # allocated lazily on first run
         self.pool: PagedKVPool | None = None
-        if prefix_cache:
+        if prefix_cache or prefix_pool is not None:
             if cfg.family == "encdec":
                 raise ValueError(
                     "prefix cache cannot serve encdec: the cross-attention "
                     "cache is built from per-request frames, so token-hash "
                     "block sharing would alias state across requests")
-            self.pool = PagedKVPool(prefix_blocks, prefix_block_size)
+            # `prefix_pool` hands in an already-populated pool — the elastic
+            # supervisor's rescale path, which carries resident blocks (and
+            # their eviction policy) across scheduler rebuilds
+            self.pool = prefix_pool if prefix_pool is not None else \
+                PagedKVPool(prefix_blocks, prefix_block_size,
+                            evict_cost_fn=self._re_prefill_cost)
             pool = self.pool
 
             # both admission-side pool programs are jitted outside the
@@ -458,11 +527,38 @@ class ContinuousSchedule(_SchedulerBase):
             self._prefix_admit_jit = _prefix_admit
             self._pool_insert_jit = _pool_insert
 
+    def _re_prefill_cost(self, n_tokens: int) -> float:
+        """Costmodel floor+work of re-prefilling an `n_tokens` resident
+        prefix at batch 1: what evicting a block whose chain ends
+        `n_tokens` deep would cost to rebuild on a future hit-turned-miss.
+        The pool minimizes this over refcount-0 eviction candidates
+        (`PagedKVPool._evict_victim`), so cheap-to-recreate shallow chains
+        go before deep ones."""
+        shape = ShapeConfig("re_prefill", max(1, n_tokens), 1, "prefill")
+        t = self.stream.target
+        flops = costmodel.model_flops(self.cfg, shape) \
+            + costmodel.attention_flops(self.cfg, shape)
+        work = max(flops / t.peak_flops,
+                   costmodel.weight_bytes(self.cfg) / t.hbm_bandwidth)
+        return self.stream.floor_s + work
+
     def _ensure_caches(self) -> None:
         if self.caches is None:
             self.caches = self.model.init_cache(self.n_slots, self.max_len)
-        if self.pool is not None and self.pool.arenas is None:
-            self.pool.bind(self.caches, max_len=self.max_len)
+            if self.ctx.active:
+                self.caches = self._place(
+                    self.caches,
+                    shard_rules.serve_cache_specs(self.caches, self.ctx))
+        if self.pool is not None:
+            if self.pool.arenas is None:
+                self.pool.bind(self.caches, max_len=self.max_len)
+            if self.ctx.active:
+                # fresh or carried-over (supervisor rescale) arenas land
+                # replicated on the *current* mesh — a carried pool's rows
+                # may still be placed on the pre-failure device set
+                self.pool.arenas = self._place(
+                    self.pool.arenas,
+                    shard_rules.serve_arena_specs(self.pool.arenas, self.ctx))
 
     # -- prefix-cache admission ---------------------------------------------
     def _prefix_hit_admit(self, req: Request, slot: _Slot, sidx,
@@ -599,8 +695,13 @@ class ContinuousSchedule(_SchedulerBase):
         queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
         self._ensure_caches()
         results: list[RequestResult] = []
+        # alias live state for the elastic supervisor: both lists mutate in
+        # place, so lane snapshots survive a mid-run HostFailure
+        self._queue, self._results = queue, results
         step = 0
         while queue or any(s.active for s in self.slots):
+            if self.step_hook is not None:
+                self.step_hook(self, step)
             # admissions: free lanes x arrived requests, in arrival order
             for i, slot in enumerate(self.slots):
                 if not queue or queue[0].arrival > step:
@@ -627,8 +728,8 @@ class ContinuousSchedule(_SchedulerBase):
                 if s.active:
                     tok[i, 0] = s.next_tok
                     pos[i] = s.next_pos
-            tokj = jnp.asarray(tok)
-            posj = jnp.asarray(pos)
+            tokj = self._batch_put(tok)
+            posj = self._batch_put(pos)
             decode, dkey = self._decode_program(self.caches, tokj, posj)
             self.stream.encode_operation(
                 decode, (self.params, self.caches, tokj, posj), dkey,
@@ -756,7 +857,7 @@ class SLOSchedule(ContinuousSchedule):
 
         compiled, key = self.cache.compile(
             fused, self.params, caches, tok, pos, forced, do_sample, rids,
-            jit_kwargs={"donate_argnums": (1,)})
+            options=self._copts, jit_kwargs={"donate_argnums": (1,)})
         self._decode_keys.add(key)
         hit = (compiled, key)
         self._step_memo[sig] = hit
@@ -829,8 +930,8 @@ class SLOSchedule(ContinuousSchedule):
             if s.active:
                 tok0[i, 0] = s.next_tok
                 rids[i] = s.req.rid
-        tok_dev = jnp.asarray(tok0)       # becomes a chained async value
-        ridsj = jnp.asarray(rids)
+        tok_dev = self._batch_put(tok0)   # becomes a chained async value
+        ridsj = self._batch_put(rids)
         plan: list[tuple[Any, list[int]]] = []
         for _ in range(k):
             pos = np.zeros((n,), np.int32)
@@ -850,9 +951,9 @@ class SLOSchedule(ContinuousSchedule):
                     mask[i] = True
                     sampled_lanes.append(i)
                 s.next_pos = nxt
-            posj = jnp.asarray(pos)
-            forcedj = jnp.asarray(forced)
-            maskj = jnp.asarray(mask)
+            posj = self._batch_put(pos)
+            forcedj = self._batch_put(forced)
+            maskj = self._batch_put(mask)
             compiled, dkey = self._fused_step_program(
                 self.caches, tok_dev, posj, forcedj, maskj, ridsj)
             self.stream.encode_operation(
@@ -883,8 +984,11 @@ class SLOSchedule(ContinuousSchedule):
         queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
         self._ensure_caches()
         results: list[RequestResult] = []
+        self._queue, self._results = queue, results
         step = 0
         while queue or any(s.active for s in self.slots):
+            if self.step_hook is not None:
+                self.step_hook(self, step)
             # admissions happen at a drained barrier (prefill + lane writes
             # are stream dispatches themselves); the gate reads the ledger
             for i, slot in enumerate(self.slots):
@@ -936,7 +1040,8 @@ SCHEDULES = {
 _SLO_KW = ("slo_ms",)
 _SPEC_KW = ("draft_depth", "draft", "drafter", "draft_ckpt",
             "draft_branches")
-_PREFIX_KW = ("prefix_cache", "prefix_blocks", "prefix_block_size")
+_PREFIX_KW = ("prefix_cache", "prefix_blocks", "prefix_block_size",
+              "prefix_pool")
 
 
 def make_scheduler(schedule: str, model, params, cfg, *, n_slots: int,

@@ -42,6 +42,15 @@ The paper's serving shape (ch. 2/5/14), end to end:
     floors buy up to depth+1 tokens (§9 economics), token-exact against
     the sequential reference.
 
+  * **multi-host mesh serving** — `--mesh-shape 4x2` runs the same
+    scheduler under a device mesh: lanes (the decode batch dim) shard over
+    the "data" axis, packed MoE expert banks shard over the "model" axis
+    (the EP `shard_map` path), and the token streams stay bit-identical to
+    the single-device run. `--evacuate-on-failure` (with `--fail-host N`
+    to inject a loss) wraps the loop in the `ServeSupervisor`: heartbeats
+    every tick, and on host loss the mesh shrinks to the survivors and the
+    lost lanes re-admit token-exact.
+
 All scheduling logic lives in `repro.launch.scheduler`; this module only
 parses arguments, builds the model/requests, and reports.
 """
@@ -65,8 +74,34 @@ from repro.launch.speculative import DRAFT_KINDS
 from repro.models.model import build_model
 from repro.optim.compression import compress_model_params
 from repro.parallel.ctx import ParallelContext
+from repro.runtime.supervisor import FailureInjection, ServeSupervisor
 
 WEIGHT_FORMS = ("fp16", "int4_palette", "sparse")
+
+_MESH_NAMES = {2: ("data", "model"), 3: ("pod", "data", "model")}
+
+
+def parse_mesh(spec: str) -> ParallelContext:
+    """'4x2' -> a ("data","model") mesh context; '' -> the null context.
+
+    Two dims shard lanes over "data" and MoE expert banks over "model";
+    three dims add a leading "pod" axis that also carries lanes (the
+    cache/batch rules shard dim 0 over ("pod","data") jointly)."""
+    if not spec:
+        return ParallelContext(mesh=None)
+    dims = tuple(int(x) for x in spec.lower().split("x"))
+    names = _MESH_NAMES.get(len(dims))
+    if names is None or any(d < 1 for d in dims):
+        raise ValueError(f"--mesh-shape {spec!r}: want 2 or 3 positive "
+                         "'x'-separated dims, e.g. 4x2 or 2x2x2")
+    need = int(np.prod(dims))
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"--mesh-shape {spec} wants {need} devices, {have} visible "
+            f"(XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            "fakes them on CPU)")
+    return ParallelContext(mesh=jax.make_mesh(dims, names))
 
 
 def run(argv=None) -> dict:
@@ -149,15 +184,44 @@ def run(argv=None) -> dict:
     ap.add_argument("--requests", type=int, default=1,
                     help="identical request rounds; round 2+ must hit the "
                          "program cache")
+    ap.add_argument("--mesh-shape", default="",
+                    help="serve on a device mesh, e.g. '4x2' = lanes over a "
+                         "4-way 'data' axis x MoE expert banks over a 2-way "
+                         "'model' axis (3 dims: pod x data x model); token "
+                         "streams stay bit-identical to the null mesh")
+    ap.add_argument("--evacuate-on-failure", action="store_true",
+                    help="continuous/slo: wrap the scheduler in the "
+                         "ServeSupervisor — heartbeat every tick, watchdog "
+                         "on hangs, and on host loss shrink the mesh to the "
+                         "survivors and re-admit the lost host's lanes "
+                         "token-exact")
+    ap.add_argument("--fail-host", type=int, default=-1,
+                    help="inject a failure of this host (batch-axis rank) "
+                         "mid-stream to exercise evacuation; -1 = none "
+                         "(implies --evacuate-on-failure)")
+    ap.add_argument("--fail-at-step", type=int, default=3,
+                    help="scheduler tick the injected failure fires at")
+    ap.add_argument("--fail-kind", default="vanish",
+                    choices=("vanish", "hang"),
+                    help="vanish = host stops heartbeating; hang = one tick "
+                         "stalls past the watchdog deadline")
     args = ap.parse_args(argv)
 
     if args.no_dispatch and args.weight_form != "fp16":
         ap.error("packed weight forms require the dispatcher")
+    use_supervisor = args.evacuate_on_failure or args.fail_host >= 0
+    if use_supervisor and args.schedule not in ("continuous", "slo"):
+        ap.error(f"--evacuate-on-failure serves --schedule continuous or "
+                 f"slo, not {args.schedule}")
+    try:
+        ctx = parse_mesh(args.mesh_shape)
+    except ValueError as e:
+        ap.error(str(e))
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
     target = hal.get_target(args.target)
     dispatcher = None if args.no_dispatch else KernelDispatcher(target)
-    model = build_model(cfg, ParallelContext(mesh=None), dispatcher=dispatcher)
+    model = build_model(cfg, ctx, dispatcher=dispatcher)
     params = model.init(jax.random.PRNGKey(args.seed))
     if args.ckpt:
         from repro.checkpoint.checkpoint import CheckpointManager
@@ -202,10 +266,34 @@ def run(argv=None) -> dict:
                      f"not {args.schedule}")
         extra.update(prefix_cache=True, prefix_blocks=args.prefix_blocks,
                      prefix_block_size=args.prefix_block_size)
-    sched = make_scheduler(args.schedule, model, params, cfg,
-                           n_slots=args.batch, max_len=max_len,
-                           sampling=args.sampling, seed=args.seed,
-                           stream=stream, **extra)
+    def make_sched(sctx, pool):
+        # the supervisor rebuilds the scheduler on the shrunken mesh after
+        # an evacuation; the stream (floor ledger) and program cache carry
+        # across, the paged pool rides in via prefix_pool. The model's
+        # internal sharding constraints are baked against its build mesh,
+        # so a rescaled context needs a rebuilt model closure (params are
+        # mesh-independent and re-place through the scheduler).
+        m = model if sctx is ctx else build_model(cfg, sctx,
+                                                  dispatcher=dispatcher)
+        skw = dict(extra)
+        if pool is not None:
+            skw["prefix_pool"] = pool
+        return make_scheduler(args.schedule, m, params, cfg,
+                              n_slots=args.batch, max_len=max_len,
+                              sampling=args.sampling, seed=args.seed,
+                              stream=stream, ctx=sctx, **skw)
+
+    supervisor = None
+    if use_supervisor:
+        injection = None
+        if args.fail_host >= 0:
+            injection = FailureInjection(host=args.fail_host,
+                                         at_step=args.fail_at_step,
+                                         kind=args.fail_kind)
+        supervisor = ServeSupervisor(make_sched, ctx, injection=injection)
+        engine = supervisor
+    else:
+        engine = make_sched(ctx, None)
 
     results = []
     t0 = time.perf_counter()
@@ -214,12 +302,13 @@ def run(argv=None) -> dict:
                         max_new_tokens=args.gen,
                         frames=None if frames is None else frames[i])
                 for i in range(len(lens))]
-        results = sched.run(reqs)
+        results = supervisor.serve(reqs) if supervisor is not None \
+            else engine.run(reqs)
     wall = time.perf_counter() - t0
 
     n_requests = len(lens) * max(args.requests, 1)
     total_tokens = args.gen * n_requests
-    stats = sched.stats(n_requests)
+    stats = engine.stats(n_requests)
     # serving throughput excludes AOT compilation (the ProgramCache tracks
     # its own compile seconds); a cold first round is compile-dominated
     serve_wall = max(wall - program_cache.stats.compile_seconds, 1e-9)
@@ -244,6 +333,14 @@ def run(argv=None) -> dict:
         prefix_note = (f" | prefix cache: {pc['hits']} hits / "
                        f"{pc['misses']} misses, {pc['hit_tokens']} prefill "
                        f"tokens skipped, {pc['evictions']} evictions")
+    mesh_note = ""
+    if ctx.active:
+        mesh_note = (f" | mesh {args.mesh_shape}: {stats['n_hosts']} hosts, "
+                     f"fleet floor {stats['fleet_floor_s']*1e3:.2f} ms")
+    if supervisor is not None:
+        mesh_note += (f" | supervisor: {stats['restarts']} restarts, "
+                      f"{len(stats['rescales'])} rescales, evacuated lanes "
+                      f"{stats['evacuated_rids']}")
     slo_note = ""
     if args.schedule == "slo":
         slo_note = (f" | in-flight<= {stats['max_in_flight']}, "
@@ -265,7 +362,7 @@ def run(argv=None) -> dict:
           f"dispatches, floor/request "
           f"{stats['per_request_dispatch_overhead_s']*1e6:.1f} us | "
           f"program cache h{program_cache.stats.hits}/"
-          f"m{program_cache.stats.misses}{prefix_note}{slo_note}")
+          f"m{program_cache.stats.misses}{mesh_note}{prefix_note}{slo_note}")
     return out
 
 

@@ -102,6 +102,21 @@ class DispatchedWeight:
         """Slice one leading stack dim (expert banks inside the MoE loop)."""
         return jax.tree.map(lambda a: a[i], self)
 
+    def stack_specs(self, *axes) -> "DispatchedWeight":
+        """PartitionSpec pytree (same structure, one spec per payload leaf)
+        assigning `axes[i]` to leading stack dim `i`. Only stack dims are
+        addressable for sharding: the packed 2-D matmul view interleaves
+        logical K/N into nibble planes / codebooks / selector bits, so
+        whole-bank (layer/expert) partitioning is the sole meaningful cut.
+        Every payload leaf carries the same leading stack dims, so one
+        prefix spec serves them all (trailing dims replicate). The result
+        is valid as a `shard_map` in_spec or `NamedSharding` spec tree."""
+        if len(axes) > self.n_stack:
+            raise ValueError(f"{len(axes)} spec axes for {self.n_stack} "
+                             "stack dims; packed matmul dims cannot shard")
+        spec = jax.sharding.PartitionSpec(*axes)
+        return jax.tree.map(lambda _: spec, self)
+
     def dense(self) -> jnp.ndarray:
         """Decode the 2-D packed payload back to the logical dense weight —
         the FOLD path the oracle and the parity reference multiply against."""

@@ -202,6 +202,17 @@ def _ep_block(cfg: ModelConfig, capacity_src: int, x_loc, router_w, wg, wu, wd):
     return y_loc, jax.lax.pmean(aux, "model")
 
 
+def _bank_spec(w, ctx: ParallelContext):
+    """shard_map in_spec for one expert bank: plain (E, d, f) arrays shard
+    the leading expert dim; a packed `DispatchedWeight` gets the same cut on
+    every payload leaf (the expert dim is its leading stack dim), so each
+    rank holds — and its palette/sparse kernels stream — only its own
+    experts' compressed payload."""
+    if isinstance(w, dsp.DispatchedWeight):
+        return w.stack_specs(*ctx.spec("model"))
+    return ctx.spec("model", None, None)
+
+
 def moe_ep(cfg: ModelConfig, p: Params, x: jnp.ndarray, ctx: ParallelContext):
     """x: (B, S, d) sharded over batch axes; experts sharded over 'model'."""
     from jax.experimental.shard_map import shard_map
@@ -239,8 +250,8 @@ def moe_ep(cfg: ModelConfig, p: Params, x: jnp.ndarray, ctx: ParallelContext):
     out_y_spec = ctx.spec(("pod", "data"), "model", None) if seq_out else pspec_x
     y, aux = shard_map(
         body, mesh=ctx.mesh,
-        in_specs=(pspec_x, ctx.spec(None, None), ctx.spec("model", None, None),
-                  ctx.spec("model", None, None), ctx.spec("model", None, None)),
+        in_specs=(pspec_x, ctx.spec(None, None), _bank_spec(p["wg"], ctx),
+                  _bank_spec(p["wu"], ctx), _bank_spec(p["wd"], ctx)),
         out_specs=(out_y_spec, ctx.spec("model")), check_rep=False,
     )(x, p["router"], p["wg"], p["wu"], p["wd"])
     out = y
@@ -256,18 +267,27 @@ def _batch_shards(ctx: ParallelContext) -> int:
     return n
 
 
+# Trace-time route ledger: which MoE path each traced forward compiled into.
+# jit caches programs, so counts tick per *trace*, not per step — tests and
+# the sharded-serve bench read "ep" > 0 to prove packed banks actually took
+# the shard_map path rather than silently falling back to dense.
+ROUTE_COUNTS: dict[str, int] = {"ep": 0, "dense": 0}
+
+
 def moe_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
                 ctx: ParallelContext):
     """Dispatch to EP when the mesh has a >1 'model' axis and the expert
-    count divides it; dense reference otherwise."""
+    count divides it; dense reference otherwise. Packed `DispatchedWeight`
+    banks take the same EP path: `shard_map` in_specs cover their payload
+    leaves (expert stack dim over 'model'), so each rank streams only its
+    local experts' compressed payload."""
     msize = ctx.axis_size("model")
     tokens = x.shape[0] * x.shape[1]
     batch_ok = x.shape[0] % _batch_shards(ctx) == 0
-    # packed expert banks go through the dispatcher (dense path); the EP
-    # shard_map moves raw arrays and would have to re-fold them
-    plain_banks = not isinstance(p["wg"], dsp.DispatchedWeight)
-    if (ctx.active and ctx.use_ep and msize > 1 and batch_ok and plain_banks
+    if (ctx.active and ctx.use_ep and msize > 1 and batch_ok
             and cfg.n_experts % msize == 0
             and tokens % (_batch_shards(ctx) * msize) == 0):
+        ROUTE_COUNTS["ep"] += 1
         return moe_ep(cfg, p, x, ctx)
+    ROUTE_COUNTS["dense"] += 1
     return moe_dense(cfg, p, x, ctx)

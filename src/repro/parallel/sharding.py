@@ -22,6 +22,7 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.models.dispatched import DispatchedWeight
 from repro.parallel.ctx import ParallelContext
 
 # (path regex, dim index -> axis) — dims not listed replicate.
@@ -148,8 +149,40 @@ def _spec_for(path: str, shape: tuple[int, ...], ctx: ParallelContext,
     return ctx.spec(*([None] * ndim))
 
 
-def param_specs(params, ctx: ParallelContext):
-    """PartitionSpec pytree matching `params` (structure-preserving)."""
+def _dispatched_specs(path: str, w: DispatchedWeight, ctx: ParallelContext,
+                      rules) -> DispatchedWeight:
+    """Spec tree for a packed weight under the path-rule table.
+
+    Only the payload's leading stack dims (layer-scan, expert) are
+    addressable: the packed 2-D matmul view interleaves logical K/N into
+    nibble planes / codebooks / selector bits, so rule dims that land past
+    the stack (TP/FSDP cuts of the dense matrix) are dropped and those
+    dims replicate. The surviving cut is the one serving needs — MoE
+    expert banks over the EP "model" axis — and it is divisibility-guarded
+    exactly like the dense rules."""
+    ref = w.payload["packed" if "packed" in w.payload else "values"]
+    n_stack = w.n_stack
+    axes: list[Any] = [None] * n_stack
+    for pattern, dims in rules:
+        if not re.search(pattern, path):
+            continue
+        offset = 1 if (path.startswith("layers/")
+                       or re.match(r"encdec/(enc|dec)/", path)) else 0
+        for dim, axis in dims.items():
+            d = dim + offset
+            if d >= n_stack:
+                continue          # packed matmul dims cannot shard
+            sizes = 1
+            names = axis if isinstance(axis, tuple) else (axis,)
+            for nm in names:
+                sizes *= ctx.axis_size(nm)
+            if sizes > 1 and ref.shape[d] % sizes == 0:
+                axes[d] = axis
+        break
+    return w.stack_specs(*ctx.spec(*axes))
+
+
+def _walk_params(params, ctx: ParallelContext, rules):
     def walk(node, prefix=""):
         if isinstance(node, dict):
             return {k: walk(node[k], f"{prefix}/{k}" if prefix else str(k))
@@ -159,8 +192,67 @@ def param_specs(params, ctx: ParallelContext):
             return out if isinstance(node, list) else tuple(out)
         if node is None:
             return None
-        return _spec_for(prefix, node.shape, ctx, _RULES, stacked_offset=True)
+        if isinstance(node, DispatchedWeight):
+            return _dispatched_specs(prefix, node, ctx, rules)
+        return _spec_for(prefix, node.shape, ctx, rules, stacked_offset=True)
     return walk(params)
+
+
+def param_specs(params, ctx: ParallelContext):
+    """PartitionSpec pytree matching `params` (structure-preserving).
+    `DispatchedWeight` nodes map to same-structure spec subtrees over their
+    payload leaves (see `_dispatched_specs`)."""
+    return _walk_params(params, ctx, _RULES)
+
+
+# Serving placement: the scheduler promises token streams bit-identical to
+# the single-device path, so per-lane math must never cross ranks — TP
+# sharding of dense weights inserts partial-sum reductions whose float
+# accumulation order differs from the single-device contraction. Everything
+# therefore replicates EXCEPT the MoE expert banks, which shard over the EP
+# "model" axis: the shard_map EP path keeps each expert's FFN whole on one
+# rank and the all_to_all moves tokens, not partial sums.
+_SERVE_RULES: list[tuple[str, dict[int, str]]] = [
+    (r"moe/w[gud]$", {0: "model"}),
+]
+
+
+def serve_param_specs(params, ctx: ParallelContext):
+    """Mesh placement for scheduler params: EP expert banks (dense or
+    packed `DispatchedWeight`) over "model", everything else replicated."""
+    return _walk_params(params, ctx, _SERVE_RULES)
+
+
+def _drop_model(spec):
+    if spec is None:
+        return None
+    axes = []
+    for a in spec:
+        if a == "model":
+            axes.append(None)
+        elif isinstance(a, tuple):
+            kept = tuple(x for x in a if x != "model")
+            axes.append(kept if kept else None)
+        else:
+            axes.append(a)
+    return P(*axes)
+
+
+def serve_cache_specs(caches, ctx: ParallelContext):
+    """Decode-cache placement for mesh serving: lanes (the batch dim) span
+    hosts over the batch axes; head/width dims stay whole. `cache_specs`'
+    model-axis cuts pair with TP attention weights — serving replicates
+    those weights (see `serve_param_specs`), and a head-sharded cache
+    against replicated projections would force cross-rank reshards that
+    break the token-bit-parity contract."""
+    return jax.tree.map(_drop_model, cache_specs(caches, ctx),
+                        is_leaf=lambda s: s is None or isinstance(s, P))
+
+
+def serve_arena_specs(arenas, ctx: ParallelContext):
+    """Paged-pool arenas replicate: rows are (block, stack, ...) with no
+    lane dim — any lane on any host may assemble any resident prefix."""
+    return jax.tree.map(lambda _: P(), arenas)
 
 
 def cache_specs(caches, ctx: ParallelContext, *, seq_fallback: bool = False):

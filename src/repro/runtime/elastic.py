@@ -56,8 +56,21 @@ def plan_rescale(old_devices: int, new_devices: int,
                        batch_scale=scale, lr_scale=scale)
 
 
-def build_mesh(plan: RescalePlan) -> Mesh:
-    return jax.make_mesh(plan.new_mesh_shape, plan.new_axis_names)
+def build_mesh(plan: RescalePlan, devices=None) -> Mesh:
+    """Mesh for the plan. `devices` (e.g. the survivors of a host loss, in
+    placement order) restricts where the mesh lands; the default uses every
+    visible device — which after a *real* host loss is exactly the survivor
+    set, but in single-process simulation still contains the "failed"
+    rows, so the elastic supervisor passes the survivors explicitly."""
+    if devices is None:
+        return jax.make_mesh(plan.new_mesh_shape, plan.new_axis_names)
+    devices = np.asarray(devices).reshape(-1)
+    need = int(np.prod(plan.new_mesh_shape))
+    if devices.size < need:
+        raise ValueError(f"plan wants {need} devices, "
+                         f"got {devices.size} survivors")
+    return Mesh(devices[:need].reshape(plan.new_mesh_shape),
+                plan.new_axis_names)
 
 
 def make_placer(mesh: Mesh, spec_fn):

@@ -101,13 +101,19 @@ class TrainingAborted(RuntimeError):
 def run_with_restarts(
     run_fn: Callable[[int], int],
     *,
-    policy: RestartPolicy = RestartPolicy(),
+    policy: RestartPolicy | None = None,
     on_restart: Callable[[int, BaseException], None] | None = None,
 ) -> int:
     """Supervisor loop. `run_fn(start_step)` trains from `start_step` (the
     caller restores its own checkpoint inside) and returns the final step;
     raising simulates/relays a node failure. Returns the final step.
+
+    `policy=None` constructs a fresh `RestartPolicy` per call — a dataclass
+    instance in the signature default would be one object shared by every
+    caller, so a caller mutating e.g. `max_restarts` would silently change
+    the retry budget of unrelated supervisors.
     """
+    policy = policy if policy is not None else RestartPolicy()
     restarts = 0
     start_step = 0
     while True:

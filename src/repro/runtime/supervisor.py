@@ -1,0 +1,294 @@
+"""Elastic serve supervision: heartbeats, host-loss evacuation, restarts.
+
+The scheduler (`launch/scheduler.py`) runs one SPMD engine fleet: lanes (the
+decode batch dim) span "hosts" — the batch-axis ranks of the serving mesh,
+each rank's model-axis column being one host's co-located engine slice. This
+module is the control plane the ROADMAP's fleet story needs on top of it,
+reusing the training-side machinery wholesale:
+
+  * **heartbeats** — every scheduler tick calls the supervisor's
+    `step_hook`; each live host records a `Heartbeat` into the
+    `StragglerDetector` and pokes the step `Watchdog`. A host that stops
+    heartbeating for `deadline_steps` ticks, or a tick that blows the
+    watchdog's wall deadline (a collective hung on a dead peer), raises
+    `HostFailure` out of the serve loop.
+  * **evacuation** — on `HostFailure` the supervisor (a) harvests results
+    the aborted run already finished, (b) snapshots every active lane's
+    host-side state machine (request, tokens generated so far), (c) plans
+    the shrunken mesh with `plan_rescale` + `build_mesh` over the surviving
+    devices (the model axis is preserved; one batch rank disappears),
+    (d) rebuilds the scheduler on the new mesh — `device_put` against the
+    new placement is the whole in-memory reshard — carrying the paged KV
+    pool across so resident prefixes stay warm, and (e) re-admits every
+    interrupted lane through the *ordinary* admission path.
+  * **token exactness** — a resumed request's prompt is the original prompt
+    plus the tokens it already generated, with the remaining budget. The
+    re-admitted lane teacher-forces through that extended prompt (bucketed
+    prefill + catch-up decode, or a paged-pool prefix hit), and sampling is
+    keyed per (rid, absolute position), so the resumed stream continues
+    with exactly the tokens the uninterrupted run would have produced.
+  * **bounded restarts** — the attempt loop is `run_with_restarts`: each
+    `HostFailure` costs one restart from the policy budget; exceeding it
+    raises `TrainingAborted` like any training job.
+
+Failure injection (`FailureInjection`) simulates the two §fault_tolerance
+failure classes in-process: "vanish" (the host stops heartbeating) and
+"hang" (one tick stalls past the watchdog deadline). Nothing here requires
+more than one physical host; on a real fleet the heartbeats would arrive
+over the network and `build_mesh`'s default device set would already be the
+survivor set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.launch.kv_pool import PagedKVPool
+from repro.launch.scheduler import Request, RequestResult, _SchedulerBase
+from repro.parallel.ctx import ParallelContext
+from repro.runtime.elastic import RescalePlan, build_mesh, plan_rescale
+from repro.runtime.fault_tolerance import (Heartbeat, RestartPolicy,
+                                           StragglerDetector, TrainingAborted,
+                                           Watchdog, run_with_restarts)
+
+
+class HostFailure(RuntimeError):
+    """A serving host is gone (or wedged): raised out of the scheduler's
+    step hook so the supervisor unwinds at a tick boundary."""
+
+    def __init__(self, host: int, reason: str = "heartbeat lost") -> None:
+        self.host = host
+        super().__init__(f"host {host}: {reason}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureInjection:
+    """Simulated host loss: at scheduler step `at_step`, host `host` either
+    stops heartbeating ("vanish") or stalls one tick past the watchdog
+    deadline ("hang"). Consumed by the first evacuation it triggers."""
+
+    host: int
+    at_step: int
+    kind: str = "vanish"          # "vanish" | "hang"
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("vanish", "hang"):
+            raise ValueError(f"unknown failure kind {self.kind!r}")
+        if self.host < 0:
+            raise ValueError(f"host must be a batch-axis rank, "
+                             f"got {self.host}")
+
+
+class ServeSupervisor:
+    """Wrap a scheduler factory with heartbeat monitoring and host-loss
+    evacuation.
+
+    `make_sched(ctx, pool)` builds a fresh scheduler (continuous or slo) on
+    the given `ParallelContext`, binding `pool` as its prefix pool when not
+    None — the supervisor calls it once up front and again after every
+    rescale. `hosts` overrides the host count for null-mesh simulation
+    (lane evacuation without any mesh: the scheduler rebuild stays on the
+    same devices); on a mesh it defaults to the batch-axis rank count.
+    """
+
+    def __init__(self, make_sched: Callable[[ParallelContext,
+                                             PagedKVPool | None],
+                                            _SchedulerBase],
+                 ctx: ParallelContext, *,
+                 hosts: int | None = None,
+                 deadline_steps: int = 3,
+                 watchdog_deadline_s: float = 5.0,
+                 policy: RestartPolicy | None = None,
+                 injection: FailureInjection | None = None) -> None:
+        self.make_sched = make_sched
+        self.ctx = ctx
+        self.n_hosts = hosts if hosts is not None else max(
+            1, int(np.prod([ctx.axis_size(a) for a in ctx.batch_axes] or [1])))
+        self.deadline_steps = deadline_steps
+        self.watchdog = Watchdog(watchdog_deadline_s)
+        self.straggler = StragglerDetector()
+        self.policy = policy           # None -> fresh RestartPolicy per serve
+        self.injection = injection
+        self.sched = make_sched(ctx, None)
+        self.rescales: list[RescalePlan] = []
+        self.evacuated_rids: list[int] = []
+        self.restarts = 0
+        self._last_beat: dict[int, int] = {h: 0 for h in range(self.n_hosts)}
+        self._t_prev = time.monotonic()
+        # serve()-scoped request bookkeeping
+        self._orig: dict[int, Request] = {}
+        self._prefix: dict[int, list[int]] = {}
+        self._done: dict[int, RequestResult] = {}
+        self._pending: list[Request] = []
+
+    # -- lane -> host placement ---------------------------------------------
+    def host_of_lane(self, lane: int) -> int:
+        """The batch rank holding lane `lane`: `serve_cache_specs` block-
+        partitions the lane dim over the batch axes, so lanes map to hosts
+        in contiguous blocks (all lanes to host 0 when indivisible — the
+        cache then replicates and no lane state is host-exclusive)."""
+        n_slots = getattr(self.sched, "n_slots", 1)
+        if self.n_hosts <= 1 or n_slots % self.n_hosts != 0:
+            return 0
+        return lane // (n_slots // self.n_hosts)
+
+    # -- the heartbeat hook --------------------------------------------------
+    def _heartbeat_hook(self, sched: _SchedulerBase, step: int) -> None:
+        inj = self.injection
+        now = time.monotonic()
+        wall = now - self._t_prev
+        self._t_prev = now
+        if inj is not None and inj.kind == "hang" and step >= inj.at_step:
+            # a collective wedged on the dead peer: this tick overruns the
+            # step deadline, and the watchdog turns the stall into a
+            # supervisor-visible failure instead of an infinite hang
+            time.sleep(self.watchdog.deadline_s * 1.25)
+            if self.watchdog.expired():
+                raise HostFailure(inj.host, "step deadline exceeded (hang)")
+        self.watchdog.poke()
+        for h in range(self.n_hosts):
+            if inj is not None and inj.kind == "vanish" \
+                    and h == inj.host and step >= inj.at_step:
+                continue               # vanished: no heartbeat arrives
+            self._last_beat[h] = step
+            self.straggler.record(Heartbeat(host=h, step=step,
+                                            wall_s=wall, t=now))
+        for h in range(self.n_hosts):
+            missed = step - self._last_beat[h]
+            if missed >= self.deadline_steps:
+                raise HostFailure(h, f"no heartbeat for {missed} steps")
+
+    # -- serving --------------------------------------------------------------
+    def serve(self, requests: list[Request]) -> list[RequestResult]:
+        """Run the request batch to completion, evacuating through however
+        many host losses the restart policy allows."""
+        self._orig = {r.rid: r for r in requests}
+        self._prefix = {r.rid: [] for r in requests}
+        self._done = {}
+        self._pending = list(requests)
+        self.sched.step_hook = self._heartbeat_hook
+        self._t_prev = time.monotonic()
+        self.watchdog.poke()
+
+        def attempt(start_step: int) -> int:
+            results = self.sched.run(list(self._pending))
+            for r in results:
+                self._finish(r)
+            return len(self._done)
+
+        def on_restart(restarts: int, err: BaseException) -> None:
+            if not isinstance(err, HostFailure):
+                raise err              # only host loss is evacuable
+            self.restarts = restarts
+            self._evacuate(err.host)
+
+        run_with_restarts(attempt, policy=self.policy,
+                          on_restart=on_restart)
+        return sorted(self._done.values(), key=lambda r: r.rid)
+
+    def _finish(self, r: RequestResult) -> None:
+        """Stitch pre-evacuation tokens onto a (possibly resumed) result,
+        reporting against the ORIGINAL request's prompt/budget."""
+        base = self._orig.get(r.rid)
+        pref = self._prefix.get(r.rid, [])
+        toks = np.concatenate([np.asarray(pref, np.int32),
+                               np.asarray(r.tokens, np.int32)]) \
+            if pref else np.asarray(r.tokens, np.int32)
+        budget = base.max_new_tokens if base is not None else toks.size
+        plen = base.prompt.size if base is not None else r.prompt_len
+        self._done[r.rid] = RequestResult(
+            r.rid, plen, toks[:budget], bucket=r.bucket,
+            admitted_step=r.admitted_step, finished_step=r.finished_step)
+
+    # -- evacuation -----------------------------------------------------------
+    def _evacuate(self, failed_host: int) -> None:
+        sched = self.sched
+        # 1. harvest requests the aborted run already finished (run() aliases
+        #    its live lists, so they survive the unwind)
+        for r in list(getattr(sched, "_results", [])):
+            self._finish(r)
+        # 2. snapshot every active lane's host-side state machine
+        snaps = []
+        for lane, slot in enumerate(getattr(sched, "slots", [])):
+            if slot.active:
+                snaps.append((slot.req, list(slot.generated),
+                              self.host_of_lane(lane)))
+        remainder = [r for r in getattr(sched, "_queue", [])
+                     if r.rid not in self._done]
+        # 3. the paged pool carries over: lane page tables die with the old
+        #    engine (the rebuilt scheduler re-admits from scratch), resident
+        #    blocks and anchors stay warm for prefix hits after the rescale
+        pool = getattr(sched, "pool", None)
+        if pool is not None:
+            for owner in list(pool.owners()):
+                pool.release(owner)
+            pool.audit()
+        # 4. rebuild resume requests: original prompt + everything generated
+        #    so far re-enters the ordinary admission path; per-(rid, pos)
+        #    sampling keys make the resumed stream token-exact
+        resume: list[Request] = []
+        for req, gen, host in snaps:
+            base = self._orig.get(req.rid, req)
+            pref = self._prefix.setdefault(req.rid, [])
+            pref.extend(gen)
+            remaining = base.max_new_tokens - len(pref)
+            if host == failed_host:
+                self.evacuated_rids.append(req.rid)
+            if remaining <= 0:     # already had its full budget in hand
+                self._done[req.rid] = RequestResult(
+                    base.rid, base.prompt.size,
+                    np.asarray(pref[:base.max_new_tokens], np.int32),
+                    bucket=-1, admitted_step=-1, finished_step=-1)
+                continue
+            prompt = np.concatenate(
+                [base.prompt, np.asarray(pref, np.int32)]) \
+                if pref else base.prompt
+            resume.append(Request(rid=base.rid, prompt=prompt,
+                                  max_new_tokens=remaining,
+                                  arrival=0, frames=base.frames))
+        self._pending = sorted(resume + remainder,
+                               key=lambda r: (r.arrival, r.rid))
+        # 5. shrink the mesh: drop the failed batch rank's device column,
+        #    keep the model axis (plan_rescale's invariant)
+        new_ctx = self.ctx
+        if self.ctx.active and self.n_hosts > 1:
+            mesh = self.ctx.mesh
+            msize = max(1, self.ctx.axis_size("model"))
+            survivors = np.delete(mesh.devices.reshape(self.n_hosts, -1),
+                                  failed_host, axis=0).reshape(-1)
+            plan = plan_rescale(mesh.devices.size, survivors.size,
+                                model_parallel=msize)
+            new_mesh = build_mesh(plan, devices=survivors)
+            new_ctx = dataclasses.replace(self.ctx, mesh=new_mesh)
+            self.rescales.append(plan)
+            self.ctx = new_ctx
+            self.n_hosts -= 1
+        elif self.n_hosts > 1:
+            self.n_hosts -= 1      # null-mesh simulation: just fewer hosts
+        else:
+            raise TrainingAborted("no surviving hosts to evacuate onto")
+        # 6. the rebuilt engine: make_sched re-places params/caches through
+        #    the scheduler's own mesh placement (device_put IS the reshard);
+        #    hosts renumber 0..n-1 on the new mesh, the injection is spent
+        self.injection = None
+        self._last_beat = {h: 0 for h in range(self.n_hosts)}
+        self.sched = self.make_sched(new_ctx, pool)
+        self.sched.step_hook = self._heartbeat_hook
+        self._t_prev = time.monotonic()
+        self.watchdog.poke()
+
+    # -- reporting ------------------------------------------------------------
+    def stats(self, n_requests: int) -> dict:
+        out = self.sched.stats(n_requests)
+        out.update({
+            "restarts": self.restarts,
+            "rescales": [dataclasses.asdict(p) for p in self.rescales],
+            "evacuated_rids": list(self.evacuated_rids),
+            "stragglers": self.straggler.evaluate(),
+            "n_hosts_now": self.n_hosts,
+        })
+        return out

@@ -188,6 +188,78 @@ def test_cow_write_never_aliases_shared_blocks():
         pool.write("r2", 0, toks(1, 2, 3))
 
 
+def test_cost_aware_eviction_prefers_cheapest_chain():
+    """With `evict_cost_fn` set, allocation pressure evicts the refcount-0
+    block whose chain is cheapest to re-prefill — not the oldest. A leaf's
+    chain cost is depth x block_size tokens, so shallow chains (cheap to
+    recreate) go first and deep resident prefixes stay hot."""
+    # plain LRU control: the oldest refcount-0 leaf goes, even though its
+    # chain is the expensive one to rebuild
+    pool = PagedKVPool(3, 2)
+    a, _, _ = pool.reserve(toks(1, 2, 3, 4))      # depth-2 chain, oldest
+    b, _, _ = pool.reserve(toks(5, 6))            # depth-1 chain, newest
+    pool.reserve(toks(7, 7))
+    assert a[1] not in pool.resident() and b[0] in pool.resident()
+    pool.audit()
+
+    # cost-aware: same pressure evicts the shallow (cheap) chain instead
+    pool = PagedKVPool(3, 2, evict_cost_fn=lambda n_tokens: float(n_tokens))
+    a, _, _ = pool.reserve(toks(1, 2, 3, 4))
+    b, _, _ = pool.reserve(toks(5, 6))
+    pool.reserve(toks(7, 7))
+    assert b[0] not in pool.resident(), "cheapest chain must evict first"
+    assert all(k in pool.resident() for k in a), \
+        "the deep (expensive) chain must stay resident"
+    assert pool.stats["evictions"] == 1
+    pool.audit()
+
+
+def test_cost_aware_eviction_skips_referenced_blocks():
+    pool = PagedKVPool(2, 2, evict_cost_fn=lambda n: float(n))
+    a, _, _ = pool.reserve(toks(1, 2))
+    pool.acquire("r0", a)
+    b, _, _ = pool.reserve(toks(3, 4))
+    keys, new, _ = pool.reserve(toks(5, 5))       # b is the only candidate
+    assert a[0] in pool.resident() and b[0] not in pool.resident()
+    pool.audit()
+
+
+def test_block_depth_tracks_chain_length():
+    """`audit` enforces depth = parent.depth + 1 along every chain — both
+    the `reserve` and the `write` allocation paths."""
+    pool = PagedKVPool(8, 2)
+    keys, _, _ = pool.reserve(toks(1, 2, 3, 4, 5, 6))
+    depths = [pool._nodes[k].depth for k in keys]
+    assert depths == [1, 2, 3]
+    pool.audit()
+    pool.acquire("r0", keys)
+    k = pool.write("r0", 1, toks(8, 9))           # CoW divergence at idx 1
+    assert pool._nodes[k].depth == 2
+    pool.audit()
+
+
+def test_scheduler_re_prefill_cost_feeds_pool():
+    """ContinuousSchedule wires its costmodel re-prefill estimate into the
+    pool: deeper chains cost more, and every cost includes the dispatch
+    floor (evicting anything costs at least one prefill dispatch)."""
+    from repro.launch.scheduler import make_scheduler
+    from repro.parallel.ctx import ParallelContext
+
+    cfg = configs.get_smoke("tinyllama-1.1b")
+    model = build_model(cfg, ParallelContext(mesh=None))
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    sched = make_scheduler("continuous", model, params, cfg, n_slots=2,
+                           max_len=32, sampling="greedy", seed=0,
+                           prefix_cache=True, prefix_blocks=8,
+                           prefix_block_size=4)
+    assert sched.pool.evict_cost_fn is not None
+    c8, c64 = sched._re_prefill_cost(8), sched._re_prefill_cost(64)
+    assert 0 < sched.stream.floor_s < c8 <= c64
+    # short chains are weight-streaming-bound (equal cost is fine); by a
+    # million tokens the flops term must dominate and the cost must grow
+    assert sched._re_prefill_cost(1 << 20) > c64
+
+
 # ---------------------------------------------------------------------------
 # Pool invariants: seeded random-op interpreter (numpy fuzz + hypothesis)
 # ---------------------------------------------------------------------------

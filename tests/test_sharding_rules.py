@@ -1,0 +1,280 @@
+"""Sharding rule-table tests: pure spec computation, no multi-device mesh.
+
+The rules in `parallel/sharding.py` are path-pattern tables consumed by both
+training (`param_specs`/`cache_specs`, TP+FSDP) and serving
+(`serve_param_specs`/`serve_cache_specs`, EP-only + lane sharding). These
+tests drive them with a duck-typed context whose axis sizes are arbitrary,
+so the divisibility fallbacks, the FSDP/embed size gates, the stacked-layer
+offset and the `DispatchedWeight` payload handling are all checked without
+forcing virtual devices (the mesh-execution side lives in
+`test_distributed.py` / `test_mesh_serve.py`).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models.dispatched import DispatchedWeight, WeightForm
+from repro.models.model import build_model
+from repro.parallel import sharding
+from repro.parallel.ctx import ParallelContext
+
+
+class FakeCtx:
+    """Duck-typed ParallelContext with arbitrary axis sizes and no mesh —
+    the rule tables only consume axis_size/spec/batch_axes."""
+
+    def __init__(self, **sizes):
+        self._sizes = sizes
+
+    active = True
+
+    @property
+    def axis_names(self):
+        return tuple(self._sizes)
+
+    @property
+    def batch_axes(self):
+        return tuple(a for a in ("pod", "data") if a in self._sizes)
+
+    @property
+    def model_axis(self):
+        return "model" if "model" in self._sizes else None
+
+    def axis_size(self, name):
+        return self._sizes.get(name, 1)
+
+    def spec(self, *axes):
+        cleaned = []
+        for a in axes:
+            if a is None:
+                cleaned.append(None)
+            elif isinstance(a, tuple):
+                present = tuple(x for x in a if x in self._sizes)
+                cleaned.append(present if present else None)
+            else:
+                cleaned.append(a if a in self._sizes else None)
+        return P(*cleaned)
+
+    def divisible(self, n, axis):
+        s = self.axis_size(axis)
+        return s > 1 and n % s == 0
+
+
+CTX = FakeCtx(data=4, model=2)
+
+
+def _axes_of(spec):
+    flat = []
+    for a in spec:
+        if isinstance(a, tuple):
+            flat.extend(a)
+        elif a is not None:
+            flat.append(a)
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# param_specs across every architecture family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_param_specs_cover_every_arch(arch):
+    """Every arch's param tree maps to a same-structure spec tree whose
+    ranks match and whose axes all exist on the context."""
+    cfg = configs.get_smoke(arch)
+    model = build_model(cfg, ParallelContext(mesh=None))
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = sharding.param_specs(params, CTX)
+    p_leaves = jax.tree_util.tree_leaves_with_path(params)
+    s_leaves = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(p_leaves) == len(s_leaves), f"{arch}: structure mismatch"
+    for (pp, leaf), (sp, spec) in zip(p_leaves, s_leaves):
+        assert pp == sp
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim, f"{arch}: {pp} over-ranked"
+        for ax in _axes_of(spec):
+            assert ax in CTX.axis_names
+
+
+def test_cache_specs_cover_every_arch():
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get_smoke(arch)
+        model = build_model(cfg, ParallelContext(mesh=None))
+        caches = jax.eval_shape(lambda: model.init_cache(4, 32))
+        specs = sharding.cache_specs(caches, CTX)
+        pairs = zip(
+            jax.tree_util.tree_leaves(caches),
+            jax.tree_util.tree_leaves(specs,
+                                      is_leaf=lambda x: isinstance(x, P)))
+        for leaf, spec in pairs:
+            assert len(spec) <= leaf.ndim, f"{arch}: cache over-ranked"
+
+
+# ---------------------------------------------------------------------------
+# divisibility fallback + size gates (_spec_for directly)
+# ---------------------------------------------------------------------------
+
+def test_divisibility_fallback_replicates():
+    # 7 heads on a 2-way model axis: the head dim must replicate
+    spec = sharding._spec_for("blk/mix/wq", (64, 7, 16), CTX,
+                              sharding._RULES, stacked_offset=True)
+    assert spec == P(None, None, None)
+    # 8 heads divide: TP applies (FSDP stays off — weight under the gate)
+    spec = sharding._spec_for("blk/mix/wq", (64, 8, 16), CTX,
+                              sharding._RULES, stacked_offset=True)
+    assert spec == P(None, "model", None)
+
+
+def test_fsdp_min_elements_gate():
+    small = (1024, 8, 64)                    # 0.5M elements: no FSDP
+    spec = sharding._spec_for("blk/mix/wq", small, CTX,
+                              sharding._RULES, stacked_offset=True)
+    assert "data" not in _axes_of(spec)
+    big = (8192, 64, 64)                     # 33.5M >= FSDP_MIN_ELEMENTS
+    assert np.prod(big) >= sharding.FSDP_MIN_ELEMENTS
+    spec = sharding._spec_for("blk/mix/wq", big, CTX,
+                              sharding._RULES, stacked_offset=True)
+    assert spec == P("data", "model", None)
+
+
+def test_embed_shard_min_elements_gate():
+    small = (512, 64)
+    spec = sharding._spec_for("embed/table", small, CTX,
+                              sharding._RULES, stacked_offset=True)
+    assert spec == P(None, None)             # replicate small tables
+    big = (32768, 8192)                      # 268M >= EMBED_SHARD_MIN
+    assert np.prod(big) >= sharding.EMBED_SHARD_MIN_ELEMENTS
+    spec = sharding._spec_for("embed/table", big, CTX,
+                              sharding._RULES, stacked_offset=True)
+    assert spec == P("model", None)
+
+
+def test_stacked_offset_shifts_rule_dims():
+    # stacked layer params carry a leading L dim: "layers/..." shifts +1
+    stacked = sharding._spec_for("layers/mix/wq", (3, 64, 8, 16), CTX,
+                                 sharding._RULES, stacked_offset=True)
+    assert stacked == P(None, None, "model", None)
+    flat = sharding._spec_for("encdec/enc/attn/wq", (3, 64, 8, 16), CTX,
+                              sharding._RULES, stacked_offset=True)
+    assert flat == P(None, None, "model", None)
+    unstacked = sharding._spec_for("blk/mix/wq", (64, 8, 16), CTX,
+                                   sharding._RULES, stacked_offset=True)
+    assert unstacked == P(None, "model", None)
+
+
+def test_cache_rule_tries_stacked_then_flat():
+    # stacked (L,B,S,KV,dh): batch at 1, heads at 3
+    spec = sharding.cache_specs({"self": {"k": jax.ShapeDtypeStruct(
+        (3, 8, 32, 4, 16), jnp.float32)}}, CTX)
+    assert spec["self"]["k"] == P(None, ("data",), None, "model", None)
+    # rank-1 /pos: the stacked offset runs off the rank, falls back to 0
+    spec = sharding.cache_specs({"self": {"pos": jax.ShapeDtypeStruct(
+        (8,), jnp.int32)}}, CTX)
+    assert spec["self"]["pos"] == P(("data",))
+
+
+# ---------------------------------------------------------------------------
+# DispatchedWeight payloads
+# ---------------------------------------------------------------------------
+
+def _packed_bank(*stack, d=8, f=16):
+    """A hand-rolled INT4_PALETTE bank: payload leaves share the leading
+    `stack` dims (layer-scan and/or expert), trailing dims are the packed
+    matmul view."""
+    return DispatchedWeight(
+        form=WeightForm.INT4_PALETTE,
+        contract_shape=(d,), out_shape=(f,), dtype_name="float32",
+        payload={"packed": jnp.zeros((*stack, d, f // 2), jnp.uint8),
+                 "lut": jnp.zeros((*stack, 16), jnp.float32)})
+
+
+def test_stack_specs_rejects_matmul_dims():
+    bank = _packed_bank(4)
+    assert bank.n_stack == 1
+    with pytest.raises(ValueError, match="packed matmul dims"):
+        bank.stack_specs("model", "data")
+
+
+def test_param_specs_handles_dispatched_weight():
+    # unstacked (E,...) bank: rule dim 0 lands on the expert dim
+    specs = sharding.param_specs({"blk": {"moe": {"wg": _packed_bank(4)}}},
+                                 CTX)
+    bank_specs = specs["blk"]["moe"]["wg"]
+    assert isinstance(bank_specs, DispatchedWeight)
+    for leaf in jax.tree_util.tree_leaves(
+            bank_specs, is_leaf=lambda x: isinstance(x, P)):
+        assert leaf == P("model")
+    # layer-stacked (L,E,...) bank under "layers/": the offset shifts the
+    # expert rule to dim 1; the FSDP dim falls past the stack and drops
+    specs = sharding.param_specs(
+        {"layers": {"moe": {"wg": _packed_bank(3, 4)}}}, CTX)
+    for leaf in jax.tree_util.tree_leaves(
+            specs["layers"]["moe"]["wg"],
+            is_leaf=lambda x: isinstance(x, P)):
+        assert leaf == P(None, "model")
+
+
+def test_dispatched_divisibility_guard():
+    # 5 experts on a 2-way model axis: the bank replicates
+    specs = sharding.param_specs({"blk": {"moe": {"wg": _packed_bank(5)}}},
+                                 CTX)
+    for leaf in jax.tree_util.tree_leaves(
+            specs["blk"]["moe"]["wg"],
+            is_leaf=lambda x: isinstance(x, P)):
+        assert leaf == P(None)
+
+
+# ---------------------------------------------------------------------------
+# serving placement rules
+# ---------------------------------------------------------------------------
+
+def test_serve_param_specs_replicate_all_but_expert_banks():
+    cfg = configs.get_smoke("dbrx-132b")
+    model = build_model(cfg, ParallelContext(mesh=None))
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = sharding.serve_param_specs(params, CTX)
+    leaves = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    sharded = [jax.tree_util.keystr(kp) for kp, s in leaves if _axes_of(s)]
+    assert sharded, "expert banks must shard over the EP axis"
+    for kp, spec in leaves:
+        path = jax.tree_util.keystr(kp)
+        if "moe" in path and any(w in path for w in ("wg", "wu", "wd")):
+            # layer-scanned params carry a leading L dim: the EP cut lands
+            # on the expert dim right after it
+            assert _axes_of(spec) == ["model"], path
+            assert spec[1] == "model", path
+        else:
+            assert not _axes_of(spec), f"{path} must replicate for serving"
+
+
+def test_serve_cache_specs_strip_model_axis():
+    caches = {"self": {"k": jax.ShapeDtypeStruct((3, 8, 32, 4, 16),
+                                                 jnp.float32),
+                       "state": jax.ShapeDtypeStruct((3, 8, 4, 2, 8),
+                                                     jnp.float32)}}
+    specs = sharding.serve_cache_specs(caches, CTX)
+    for spec in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)):
+        assert "model" not in _axes_of(spec)
+    # the lane/batch sharding survives the strip
+    assert "data" in _axes_of(specs["self"]["k"])
+
+
+def test_serve_arena_specs_replicate():
+    arenas = {"k": jnp.zeros((4, 2, 8)), "v": jnp.zeros((4, 2, 8))}
+    specs = sharding.serve_arena_specs(arenas, CTX)
+    assert all(s == P() for s in jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+
+
+def test_batch_specs_divisibility():
+    ctx = FakeCtx(pod=2, data=2, model=2)
+    x = jnp.zeros((8, 16))
+    assert sharding.batch_specs(x, ctx) == P(("pod", "data"), None)
+    assert sharding.batch_specs(jnp.zeros((6, 16)), ctx) == P(None, None)

@@ -99,6 +99,27 @@ def test_supervisor_restarts_after_injected_crash():
     assert final == 30 and crashes["n"] == 1
 
 
+def test_supervisor_default_policy_is_fresh_per_call():
+    """Regression: `policy` used to default to a module-level
+    `RestartPolicy()` instance — one caller mutating it would change every
+    other caller's retry budget. The default must be None, constructing a
+    fresh policy inside each call."""
+    import inspect
+    assert inspect.signature(run_with_restarts) \
+        .parameters["policy"].default is None
+
+    calls = {"n": 0}
+
+    def flaky(start_step):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("boom")
+        return 42
+
+    assert run_with_restarts(flaky) == 42      # default budget covers 2
+    assert calls["n"] == 3
+
+
 def test_straggler_detector_flags_slow_host():
     det = StragglerDetector(window=8, threshold=1.5, patience=2)
     import time
