@@ -135,6 +135,11 @@ class DispatchRecord:
     complete_ts: float = 0.0   # perf_counter when the drain saw it complete
     inflight_depth: int = 0    # ops submitted and not yet complete at submit
                                # time: 0 on a sync stream, < window on async
+    span: tuple[int, int] | None = None
+                               # token span [lo, hi) this dispatch covered —
+                               # set by chunked prefill so the bench can
+                               # audit that chunks tile the prompt and each
+                               # one was floor-charged; None elsewhere
 
 
 class ExecutionStream:
@@ -157,7 +162,7 @@ class ExecutionStream:
         self.floor_s = self.target.dispatch_floor_s if floor_s is None \
             else floor_s
         self.records: list[DispatchRecord] = []
-        self._encoded: list[tuple[Any, tuple, dict, str, int, int]] = []
+        self._encoded: list[tuple[Any, tuple, dict, str, int, int, Any]] = []
         self._seq = 0
 
     @property
@@ -167,11 +172,13 @@ class ExecutionStream:
 
     def encode_operation(self, compiled, args: tuple, key: str = "",
                          kwargs: dict | None = None, *,
-                         batch: int = 1) -> None:
+                         batch: int = 1,
+                         span: tuple[int, int] | None = None) -> None:
         """Queue one compiled program. `batch` is the number of samples the
-        dispatch carries — the denominator of per-sample floor amortization."""
+        dispatch carries — the denominator of per-sample floor amortization.
+        `span` tags the token range a chunked-prefill dispatch covers."""
         self._encoded.append((compiled, args, kwargs or {}, key, batch,
-                              len(self._encoded)))
+                              len(self._encoded), span))
 
     def execute_sync(self) -> list:
         """Run everything encoded, in order, blocking (the sound default the
@@ -179,7 +186,7 @@ class ExecutionStream:
         Always returns a list of outputs, one per encoded op, in encode
         order — including for a single op."""
         outs = []
-        for compiled, args, kwargs, key, batch, depth in self._encoded:
+        for compiled, args, kwargs, key, batch, depth, span in self._encoded:
             t0 = time.perf_counter()
             out = compiled(*args, **kwargs)
             out = jax.block_until_ready(out)
@@ -187,7 +194,8 @@ class ExecutionStream:
             wall = t1 - t0
             self.records.append(DispatchRecord(
                 key, wall, max(0.0, wall - self.floor_s), self.floor_s,
-                depth, batch, self._seq, submit_ts=t0, complete_ts=t1))
+                depth, batch, self._seq, submit_ts=t0, complete_ts=t1,
+                span=span))
             self._seq += 1
             outs.append(out)
         self._encoded.clear()
@@ -338,7 +346,7 @@ class AsyncExecutionStream(ExecutionStream):
         usable immediately as inputs of the next encoded op."""
         self._ensure_drainer()
         outs = []
-        for compiled, args, kwargs, key, batch, depth in self._encoded:
+        for compiled, args, kwargs, key, batch, depth, span in self._encoded:
             self._throttle()
             with self._lock:
                 depth_now = len(self._pending)
@@ -346,7 +354,7 @@ class AsyncExecutionStream(ExecutionStream):
             out = compiled(*args, **kwargs)     # async dispatch: returns now
             rec = DispatchRecord(
                 key, 0.0, 0.0, self.floor_s, depth, batch, self._seq,
-                submit_ts=t_sub, inflight_depth=depth_now)
+                submit_ts=t_sub, inflight_depth=depth_now, span=span)
             self._seq += 1
             h = _Inflight(rec, out)
             with self._lock:

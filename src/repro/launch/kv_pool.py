@@ -465,11 +465,18 @@ class PagedKVPool:
         self._anchor_paths = anchor_paths
         self._leaf_paths = paths
 
-    def validate_prefill(self, pf_caches, n_tokens: int) -> None:
+    def validate_prefill(self, pf_caches, n_tokens: int, *,
+                         staging: bool = False) -> None:
         """Loud-failure gate before arena writes: every paged leaf of a
         prefill cache must be batch-1, rank-matched and exactly `n_tokens`
         long on the time axis; any page-table/arena mismatch raises with the
-        tree path rather than silently caching truncated state."""
+        tree path rather than silently caching truncated state.
+
+        `staging=True` relaxes the time-extent check to >= `n_tokens`: a
+        chunked-prefill staging cache is decode-shaped (time extent =
+        max_len) but only valid through the chunk boundary `n_tokens`, and
+        `insert_blocks` slices exactly the whole-block prefix — the
+        unwritten tail past `n_tokens` is never read."""
         leaves, _ = compat.tree_flatten_with_path(pf_caches)
         seen = []
         for path, leaf in leaves:
@@ -489,10 +496,11 @@ class PagedKVPool:
                 raise ValueError(
                     f"cache leaf {loc!r}: pool insert wants a batch-1 "
                     f"prefill cache, got batch {leaf.shape[1]}")
-            if leaf.shape[_TIME_AXIS] != n_tokens:
+            extent = leaf.shape[_TIME_AXIS]
+            if (extent < n_tokens) if staging else (extent != n_tokens):
                 raise ValueError(
                     f"cache leaf {loc!r}: prefill time extent "
-                    f"{leaf.shape[_TIME_AXIS]} != inserted prefix "
+                    f"{extent} {'<' if staging else '!='} inserted prefix "
                     f"{n_tokens}; off-axis state would be dropped")
             if leaf.shape[_TIME_AXIS + 1:] != arena.shape[_TIME_AXIS + 1:]:
                 raise ValueError(

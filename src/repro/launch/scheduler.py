@@ -51,6 +51,7 @@ the `BENCH_serve.json` curve stay truthful.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from functools import partial
 from typing import Any, Iterable
@@ -273,6 +274,16 @@ class TokenSampler:
 
 
 @dataclasses.dataclass
+class _ChunkedPrefill:
+    """In-flight chunked prefill for one lane: a batch-1 decode-shaped
+    staging cache accumulating chunk writes, and the [0, target) progress."""
+
+    staging: Any
+    done: int = 0
+    target: int = 0
+
+
+@dataclasses.dataclass
 class _Slot:
     """One decode lane's host-side state machine."""
 
@@ -282,15 +293,23 @@ class _Slot:
     generated: list[int] = dataclasses.field(default_factory=list)
     bucket: int = 0
     admitted_step: int = 0
+    pending: _ChunkedPrefill | None = None
 
     @property
     def active(self) -> bool:
         return self.req is not None
 
     @property
+    def prefilling(self) -> bool:
+        """Mid chunked prefill: the lane holds the request but cannot decode
+        yet — chunks still write into the staging cache."""
+        return self.pending is not None
+
+    @property
     def generating(self) -> bool:
         """Past the prompt: the next decode step's logits are sampled."""
-        return self.active and self.next_pos >= self.req.prompt.size
+        return self.active and not self.prefilling \
+            and self.next_pos >= self.req.prompt.size
 
 
 class _SchedulerBase:
@@ -488,11 +507,24 @@ class ContinuousSchedule(_SchedulerBase):
     def __init__(self, model, params, cfg, *, n_slots: int, max_len: int,
                  prefix_cache: bool = False, prefix_blocks: int = 64,
                  prefix_block_size: int = 8,
-                 prefix_pool: PagedKVPool | None = None, **kw) -> None:
+                 prefix_pool: PagedKVPool | None = None,
+                 prefill_chunk: int | None = None, **kw) -> None:
         super().__init__(model, params, cfg, max_len=max_len, **kw)
         if n_slots < 1:
             raise ValueError(f"continuous schedule needs n_slots >= 1, "
                              f"got {n_slots}")
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, "
+                                 f"got {prefill_chunk}")
+            if cfg.family == "encdec":
+                raise ValueError(
+                    "chunked prefill cannot serve encdec: the cross-attention "
+                    "cache is built by the monolithic prefill program, so a "
+                    "decode-mode chunk has no frames to attend to")
+        self.prefill_chunk = prefill_chunk
+        self._chunk_memo: dict = {}
+        self._chunk_keys: set[str] = set()
         self.n_slots = n_slots
         self.slots = [_Slot() for _ in range(n_slots)]
         self.caches = None        # allocated lazily on first run
@@ -595,19 +627,23 @@ class ContinuousSchedule(_SchedulerBase):
         slot.next_tok = int(req.prompt[M])
         return True
 
-    def _pool_cold_insert(self, req: Request, bucket: int, pf_caches) -> None:
+    def _pool_cold_insert(self, req: Request, bucket: int, pf_caches,
+                          staging: bool = False) -> None:
         """Cold-path residency: reserve arena rows for the prefilled whole
         blocks and write them with one extra dispatch (floor-charged — the
         honest cost of caching); the chain end anchors the non-paged leaves
         (recurrent state, conv tails, ring-window KV) so later admissions
-        can resume from exactly this boundary."""
+        can resume from exactly this boundary. Chunked admissions pass
+        `staging=True`: the source is a decode-shaped staging cache whose
+        time extent is `max_len`, valid through `bucket` (a chunk boundary,
+        so the anchored chain lands exactly where chunks stopped writing)."""
         pool = self.pool
         pool.stats["misses"] += 1
         if bucket < pool.block_size:
             return
         keys, new_bids, first_new = pool.reserve(req.prompt[:bucket])
         if new_bids:
-            pool.validate_prefill(pf_caches, bucket)
+            pool.validate_prefill(pf_caches, bucket, staging=staging)
             bids = jnp.asarray(new_bids, jnp.int32)
             self.stream.encode_operation(
                 self._pool_insert_jit,
@@ -623,18 +659,104 @@ class ContinuousSchedule(_SchedulerBase):
         if self.pool is not None:
             self.pool.release(req.rid)
 
+    # -- chunked prefill ----------------------------------------------------
+    def _chunk_program(self, staging, tok, pos0):
+        """Compile-or-hit the prefill-chunk program. The staging cache is
+        decode-shaped (batch 1 x max_len) whatever the prompt, so the handle
+        is memoized by the chunk width alone: ONE ProgramCache entry per
+        chunk size, not per prompt bucket — the whole point of chunking's
+        compile economics."""
+        sig = (tok.shape, str(tok.dtype))
+        hit = self._chunk_memo.get(sig)
+        if hit is not None:
+            return hit
+        compiled, key = self.cache.compile(
+            self.model.prefill_chunk, self.params, staging, tok, pos0,
+            options=self._copts, jit_kwargs={"donate_argnums": (1,)})
+        self._chunk_keys.add(key)
+        hit = (compiled, key)
+        self._chunk_memo[sig] = hit
+        return hit
+
+    def _begin_chunked(self, slot: _Slot, req: Request, target: int) -> None:
+        """Stage a chunked prefill: allocate a fresh batch-1 decode-shaped
+        cache (attention positions init to -1, recurrent state zero — the
+        same clean state `_reset_slot` produces, so no reset dispatch is
+        needed) and mark the lane pending. Chunks advance one per serve
+        tick, so in-flight decode lanes get a window between every pair of
+        chunks instead of stalling behind one monolithic prefill."""
+        staging = self.model.init_cache(1, self.max_len)
+        if self.ctx.active:
+            staging = self._place(
+                staging, shard_rules.serve_staging_specs(staging, self.ctx))
+        slot.pending = _ChunkedPrefill(staging=staging, done=0, target=target)
+        slot.next_pos = 0
+        slot.next_tok = 0
+
+    def _advance_chunk(self, slot_idx: int, step: int) -> None:
+        """Dispatch ONE chunk for a pending lane: C prompt tokens forward in
+        decode mode against the staging cache, floor-charged on the stream
+        like any other dispatch (`span` records the token range for the
+        bench audit). The final chunk hands off to `_finish_chunked`."""
+        slot = self.slots[slot_idx]
+        pend, req = slot.pending, slot.req
+        c0 = pend.done
+        n = min(self.prefill_chunk, pend.target - c0)
+        tokj = jnp.asarray(req.prompt[None, c0:c0 + n], jnp.int32)
+        pos0 = jnp.full((1,), c0, jnp.int32)
+        compiled, ckey = self._chunk_program(pend.staging, tokj, pos0)
+        self.stream.encode_operation(
+            compiled, (self.params, pend.staging, tokj, pos0), ckey,
+            batch=1, span=(c0, c0 + n))
+        pend.staging, _ = self.stream.execute_sync()[0]
+        pend.done = c0 + n
+        if pend.done >= pend.target:
+            self._finish_chunked(slot_idx)
+
+    def _finish_chunked(self, slot_idx: int) -> None:
+        """Admit the fully-staged prefix into the lane: the staging cache's
+        time extent equals the lane's, so `_admit_into_slot` overwrites
+        every leaf of the lane wholesale (positions included) in one donated
+        dispatch — the same path bucketed admissions take. The chunk target
+        is capped at L-1, so the first decode step is always teacher-forced
+        and no finalize logits are needed."""
+        slot = self.slots[slot_idx]
+        pend, req = slot.pending, slot.req
+        sidx = jnp.asarray(slot_idx, jnp.int32)
+        if self.pool is not None:
+            self._pool_cold_insert(req, pend.target, pend.staging,
+                                   staging=True)
+        self.stream.encode_operation(
+            _admit_into_slot, (self.caches, pend.staging, sidx),
+            "admit_slot", batch=1)
+        self.caches = self.stream.execute_sync()[0]
+        slot.pending = None
+        slot.next_pos = pend.target
+        slot.next_tok = int(req.prompt[pend.target])
+
     # -- admission ----------------------------------------------------------
     def _admit(self, slot_idx: int, req: Request, step: int) -> None:
         """Prefill the bucket prefix through the stream, then write the
-        prefill state into the lane. Called after `_check`."""
+        prefill state into the lane. Called after `_check`. With
+        `prefill_chunk` set, the prompt prefills as chunks instead: the
+        target is the largest chunk multiple <= L-1 (positions target..L-1
+        catch up teacher-forced through the shared decode program, exactly
+        like a bucket-target cold admission, which keeps token streams
+        bit-identical to unchunked serving)."""
         slot = self.slots[slot_idx]
         L = req.prompt.size
-        bucket = bucket_for(L, self.buckets)
+        C = self.prefill_chunk
+        if C is not None:
+            bucket = C * ((L - 1) // C)
+        else:
+            bucket = bucket_for(L, self.buckets)
         sidx = jnp.asarray(slot_idx, jnp.int32)
         # lane writes dispatch on the stream too: the floor ledger must
         # charge every real dispatch, admissions included
         if self._prefix_hit_admit(req, slot, sidx, bucket):
             pass                  # admitted from resident blocks
+        elif C is not None and bucket > 0:
+            self._begin_chunked(slot, req, bucket)
         elif bucket == 0:
             self.stream.encode_operation(_reset_slot, (self.caches, sidx),
                                          "reset_slot", batch=1)
@@ -708,7 +830,14 @@ class ContinuousSchedule(_SchedulerBase):
                     break
                 if not slot.active:
                     self._admit(i, queue.pop(0), step)
-            active = [s for s in self.slots if s.active
+            # pending lanes advance ONE chunk per tick, so a decode window
+            # runs between every pair of chunks instead of the whole prompt
+            # blocking the in-flight lanes at once
+            for i, slot in enumerate(self.slots):
+                if slot.prefilling:
+                    self._advance_chunk(i, step)
+            active = [s for s in self.slots
+                      if s.active and not s.prefilling
                       and not (s.generating
                                and len(s.generated) >= s.req.max_new_tokens)]
             # a fully-prefilled request can finish without a decode step
@@ -717,15 +846,15 @@ class ContinuousSchedule(_SchedulerBase):
                         and len(s.generated) >= s.req.max_new_tokens:
                     self._advance_finished(s, results, step)
             if not active:
-                if queue:
-                    step += 1     # idle tick: wait for the next arrival
+                if queue or any(s.prefilling for s in self.slots):
+                    step += 1     # idle tick: arrival or mid-chunk prefill
                     continue
                 break
             # one slot-masked decode dispatch for every lane
             tok = np.zeros((self.n_slots, 1), np.int32)
             pos = np.zeros((self.n_slots,), np.int32)
             for i, s in enumerate(self.slots):
-                if s.active:
+                if s.active and not s.prefilling:
                     tok[i, 0] = s.next_tok
                     pos[i] = s.next_pos
             tokj = self._batch_put(tok)
@@ -737,7 +866,7 @@ class ContinuousSchedule(_SchedulerBase):
             self.caches, logits = self.stream.execute_sync()[0]
             lg = np.asarray(logits[:, -1, : self.cfg.vocab], np.float32)
             for i, s in enumerate(self.slots):
-                if s.active:
+                if s.active and not s.prefilling:
                     self._advance(s, lg[i], results, step)
             step += 1
         results.sort(key=lambda r: r.rid)
@@ -761,6 +890,15 @@ class ContinuousSchedule(_SchedulerBase):
         if self.pool is not None:
             out["prefix_cache"] = dict(self.pool.stats)
             out["prefix_cache"]["free_blocks"] = self.pool.free_blocks()
+        if self.prefill_chunk is not None:
+            recs = self.stream.records
+            out["chunked_prefill"] = {
+                "prefill_chunk": self.prefill_chunk,
+                "n_chunks": sum(1 for r in recs
+                                if r.key in self._chunk_keys),
+                "chunk_tokens": sum(r.span[1] - r.span[0] for r in recs
+                                    if r.span is not None),
+            }
         return out
 
 
@@ -907,7 +1045,7 @@ class SLOSchedule(ContinuousSchedule):
         syncing at the window boundary drains once per window."""
         remain = []
         for s in self.slots:
-            if not s.active:
+            if not s.active or s.prefilling:
                 continue
             # steps still teacher-forced before sampling starts at this lane
             forced_left = max(0, s.req.prompt.size - 1 - s.next_pos)
@@ -916,6 +1054,9 @@ class SLOSchedule(ContinuousSchedule):
         k = min(remain + [self.stream.max_in_flight])
         if queue and any(not s.active for s in self.slots):
             k = min(k, max(1, queue[0].arrival - step))
+        if any(s.prefilling for s in self.slots):
+            k = 1          # a pending lane's next chunk bounds the window:
+                           # decode one step, then give the chunk a turn
         return k
 
     def _pipelined_window(self, step: int, queue: list[Request],
@@ -927,7 +1068,7 @@ class SLOSchedule(ContinuousSchedule):
         tok0 = np.zeros((n, 1), np.int32)
         rids = np.zeros((n,), np.int32)
         for i, s in enumerate(self.slots):
-            if s.active:
+            if s.active and not s.prefilling:
                 tok0[i, 0] = s.next_tok
                 rids[i] = s.req.rid
         tok_dev = self._batch_put(tok0)   # becomes a chained async value
@@ -940,7 +1081,7 @@ class SLOSchedule(ContinuousSchedule):
             sampled_lanes: list[int] = []
             n_active = 0
             for i, s in enumerate(self.slots):
-                if not s.active:
+                if not s.active or s.prefilling:
                     continue
                 n_active += 1
                 pos[i] = s.next_pos
@@ -974,7 +1115,7 @@ class SLOSchedule(ContinuousSchedule):
                 if len(s.generated) >= s.req.max_new_tokens:
                     self._advance_finished(s, results, step + t)
         for i, s in enumerate(self.slots):
-            if s.active:
+            if s.active and not s.prefilling:
                 s.next_tok = int(nxt_host[i])
         return step + k
 
@@ -1000,6 +1141,12 @@ class SLOSchedule(ContinuousSchedule):
                     self.deferred_admissions += 1
                     break
                 self._admit(i, queue.pop(0), step)
+            # pending lanes advance ONE chunk at this drained barrier, so
+            # the SLO gate and the in-flight decode window both see each
+            # chunk as an ordinary dispatch — never a monolithic stall
+            for i, slot in enumerate(self.slots):
+                if slot.prefilling:
+                    self._advance_chunk(i, step)
             # a fully-prefilled request can finish without a decode step
             for s in list(self.slots):
                 if s.active and s.generating \
@@ -1010,6 +1157,9 @@ class SLOSchedule(ContinuousSchedule):
                     step += 1     # idle tick: wait for the next arrival
                     continue
                 break
+            if not any(s.active and not s.prefilling for s in self.slots):
+                step += 1         # only mid-chunk lanes: nothing to decode
+                continue
             step = self._pipelined_window(step, queue, results)
         results.sort(key=lambda r: r.rid)
         return results
@@ -1036,33 +1186,247 @@ SCHEDULES = {
     # imported at the bottom of this module
 }
 
-# schedule-specific knobs `make_scheduler` strips for everyone else
+# ---------------------------------------------------------------------------
+# Typed serve configuration
+# ---------------------------------------------------------------------------
+# `ServeConfig` is the construction API: one dataclass per schedule-specific
+# knob group, attached as a section (`slo=`, `spec=`, `prefix=`, `chunk=`).
+# A section present on a schedule it does not apply to is a loud ValueError
+# at `validate()` — the old `make_scheduler(**kw)` silently stripped such
+# knobs, which let a misspelled or misplaced flag vanish without a trace.
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """`slo` schedule knobs: admission-gate target + in-flight window."""
+    slo_ms: float | None = None
+    max_in_flight: int = SLOSchedule.MAX_IN_FLIGHT
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """`spec` schedule knobs: drafter selection + window depth."""
+    draft_depth: int = 4
+    draft: str = "shrink"
+    draft_ckpt: str | None = None
+    draft_branches: int = 1
+    drafter: Any = None           # a prebuilt Drafter overrides `draft`
+    max_in_flight: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixConfig:
+    """Paged KV prefix pool (continuous/slo). Presence of the section
+    enables the pool; `pool` hands in an already-populated PagedKVPool
+    (the elastic supervisor's rescale path)."""
+    blocks: int = 64
+    block_size: int = 8
+    pool: PagedKVPool | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkConfig:
+    """Long-context knobs (continuous/slo): chunked prefill and/or
+    ring-attention routing. `prefill_chunk` admits a long prompt as fixed-
+    size chunk programs with decode windows between them; `ring_min` routes
+    monolithic prefills of at least that many tokens through
+    `parallel.ring_attention` (needs an active multi-device mesh — consumed
+    at model build via `ParallelContext.ring_prefill_min`, not here)."""
+    prefill_chunk: int | None = None
+    ring_min: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.prefill_chunk is None and self.ring_min is None:
+            raise ValueError(
+                "ChunkConfig needs prefill_chunk and/or ring_min; an empty "
+                "section would silently do nothing")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.ring_min is not None and self.ring_min < 1:
+            raise ValueError(f"ring_min must be >= 1, got {self.ring_min}")
+
+
+#: which schedules each section applies to — the loud-rejection table
+_SECTION_SCHEDULES = {
+    "slo": ("slo",),
+    "spec": ("spec",),
+    "prefix": ("continuous", "slo"),
+    "chunk": ("continuous", "slo"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Typed serving configuration: base knobs every schedule shares, plus
+    per-schedule sections. `validate()` rejects a section attached to a
+    schedule it cannot apply to; `build_scheduler(config, ...)` is the one
+    construction path `launch/serve.py` uses."""
+    schedule: str
+    max_len: int
+    n_slots: int = 1
+    sampling: str = "greedy"
+    seed: int = 0
+    buckets: tuple[int, ...] | None = None
+    stream: ExecutionStream | None = None
+    program_cache: ProgramCache | None = None
+    target: hal.Target | None = None
+    ctx: ParallelContext | None = None
+    slo: SLOConfig | None = None
+    spec: SpecConfig | None = None
+    prefix: PrefixConfig | None = None
+    chunk: ChunkConfig | None = None
+
+    def validate(self) -> "ServeConfig":
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"schedule {self.schedule!r} not in {sorted(SCHEDULES)}")
+        for name, applies in _SECTION_SCHEDULES.items():
+            if getattr(self, name) is not None \
+                    and self.schedule not in applies:
+                raise ValueError(
+                    f"ServeConfig.{name} does not apply to the "
+                    f"{self.schedule!r} schedule (only {applies}); drop the "
+                    f"section instead of expecting it to be ignored")
+        if self.chunk is not None and self.prefix is not None \
+                and self.chunk.prefill_chunk is not None \
+                and self.chunk.prefill_chunk % self.prefix.block_size != 0:
+            raise ValueError(
+                f"prefix.block_size ({self.prefix.block_size}) must divide "
+                f"chunk.prefill_chunk ({self.chunk.prefill_chunk}): chunk "
+                f"targets are chunk multiples, and a chain only anchors "
+                f"when whole blocks tile the prefilled prefix exactly")
+        return self
+
+    def scheduler_kwargs(self) -> dict:
+        """Flatten to the scheduler constructors' keyword surface."""
+        kw: dict[str, Any] = dict(
+            sampling=self.sampling, seed=self.seed, buckets=self.buckets,
+            stream=self.stream, program_cache=self.program_cache,
+            target=self.target)
+        if self.ctx is not None:
+            kw["ctx"] = self.ctx
+        if self.slo is not None:
+            kw.update(slo_ms=self.slo.slo_ms,
+                      max_in_flight=self.slo.max_in_flight)
+        if self.spec is not None:
+            sp = self.spec
+            kw.update(draft_depth=sp.draft_depth, draft=sp.draft,
+                      draft_ckpt=sp.draft_ckpt,
+                      draft_branches=sp.draft_branches,
+                      max_in_flight=sp.max_in_flight)
+            if sp.drafter is not None:
+                kw["drafter"] = sp.drafter
+        if self.prefix is not None:
+            pf = self.prefix
+            kw.update(prefix_cache=True, prefix_blocks=pf.blocks,
+                      prefix_block_size=pf.block_size)
+            if pf.pool is not None:
+                kw["prefix_pool"] = pf.pool
+        if self.chunk is not None and self.chunk.prefill_chunk is not None:
+            kw["prefill_chunk"] = self.chunk.prefill_chunk
+        return kw
+
+
+def build_scheduler(config: ServeConfig, model, params, cfg) -> _SchedulerBase:
+    """Construct the scheduler a validated `ServeConfig` describes."""
+    config.validate()
+    kw = config.scheduler_kwargs()
+    if config.schedule == "sequential":
+        return SequentialSchedule(model, params, cfg,
+                                  max_len=config.max_len, **kw)
+    return SCHEDULES[config.schedule](model, params, cfg,
+                                      n_slots=config.n_slots,
+                                      max_len=config.max_len, **kw)
+
+
+# -- legacy keyword path ----------------------------------------------------
+#: every keyword the legacy `make_scheduler(**kw)` surface ever accepted,
+#: by the section (or base) it folds into
+_BASE_KW = ("sampling", "seed", "buckets", "stream", "program_cache",
+            "target", "ctx")
 _SLO_KW = ("slo_ms",)
 _SPEC_KW = ("draft_depth", "draft", "drafter", "draft_ckpt",
             "draft_branches")
 _PREFIX_KW = ("prefix_cache", "prefix_blocks", "prefix_block_size",
               "prefix_pool")
+_CHUNK_KW = ("prefill_chunk",)
 
 
-def make_scheduler(schedule: str, model, params, cfg, *, n_slots: int,
+def make_scheduler(schedule: str, model, params, cfg, *, n_slots: int = 1,
                    max_len: int, **kw) -> _SchedulerBase:
+    """Deprecated keyword shim over `ServeConfig` + `build_scheduler`.
+
+    The old surface silently stripped schedule-inapplicable knobs (a typo'd
+    or misplaced flag vanished without a trace). This shim keeps every
+    historical call working but is loud: unknown keywords raise TypeError,
+    knobs that do not apply to `schedule` warn before being dropped, and
+    every call emits a DeprecationWarning pointing at ServeConfig."""
+    warnings.warn(
+        "make_scheduler(**kw) is deprecated: build a ServeConfig and call "
+        "build_scheduler(config, model, params, cfg) instead",
+        DeprecationWarning, stacklevel=2)
     if schedule not in SCHEDULES:
         raise ValueError(f"schedule {schedule!r} not in {sorted(SCHEDULES)}")
+    known = set(_BASE_KW) | set(_SLO_KW) | set(_SPEC_KW) | set(_PREFIX_KW) \
+        | set(_CHUNK_KW) | {"max_in_flight"}
+    unknown = sorted(set(kw) - known)
+    if unknown:
+        raise TypeError(
+            f"make_scheduler got unknown keyword(s) {unknown}; known "
+            f"keywords: {sorted(known)}")
+
+    def strip(keys: tuple[str, ...], why: str) -> None:
+        hit = [k for k in keys if kw.get(k) not in (None, False)]
+        for k in keys:
+            kw.pop(k, None)
+        if hit:
+            warnings.warn(
+                f"make_scheduler: {hit} do(es) not apply to the "
+                f"{schedule!r} schedule ({why}); dropped — ServeConfig "
+                f"rejects this outright", UserWarning, stacklevel=3)
+
     if schedule != "slo":
-        for key in _SLO_KW:
-            kw.pop(key, None)
+        strip(_SLO_KW, "SLO admission gate is slo-only")
     if schedule != "spec":
-        for key in _SPEC_KW:
-            kw.pop(key, None)
+        strip(_SPEC_KW, "drafter knobs are spec-only")
     if schedule not in ("continuous", "slo"):  # pool rides slot admission
-        for key in _PREFIX_KW:
-            kw.pop(key, None)
+        strip(_PREFIX_KW, "the prefix pool rides slot admission")
+        strip(_CHUNK_KW, "chunked prefill rides slot admission")
+    if schedule == "spec":
+        strip(_CHUNK_KW, "spec admission stages target+drafter jointly")
     if schedule not in ("slo", "spec"):   # in-flight window is async-only
-        kw.pop("max_in_flight", None)
-    if schedule == "sequential":
-        return SequentialSchedule(model, params, cfg, max_len=max_len, **kw)
-    return SCHEDULES[schedule](model, params, cfg, n_slots=n_slots,
-                               max_len=max_len, **kw)
+        strip(("max_in_flight",), "the in-flight window is async-only")
+
+    sections: dict[str, Any] = {}
+    if schedule == "slo":
+        slo_kw = {}
+        if "slo_ms" in kw:
+            slo_kw["slo_ms"] = kw.pop("slo_ms")
+        if "max_in_flight" in kw:
+            slo_kw["max_in_flight"] = kw.pop("max_in_flight")
+        if slo_kw:
+            sections["slo"] = SLOConfig(**slo_kw)
+    if schedule == "spec":
+        spec_kw = {k: kw.pop(k) for k in
+                   _SPEC_KW + ("max_in_flight",) if k in kw}
+        if spec_kw:
+            sections["spec"] = SpecConfig(**spec_kw)
+    if kw.pop("prefix_cache", False) or kw.get("prefix_pool") is not None:
+        sections["prefix"] = PrefixConfig(
+            blocks=kw.pop("prefix_blocks", 64),
+            block_size=kw.pop("prefix_block_size", 8),
+            pool=kw.pop("prefix_pool", None))
+    else:  # pool disabled: blocks/block_size had no effect before either
+        for k in ("prefix_blocks", "prefix_block_size", "prefix_pool"):
+            kw.pop(k, None)
+    if kw.get("prefill_chunk") is not None:
+        sections["chunk"] = ChunkConfig(prefill_chunk=kw.pop("prefill_chunk"))
+    kw.pop("prefill_chunk", None)
+
+    config = ServeConfig(schedule=schedule, max_len=max_len, n_slots=n_slots,
+                         **kw, **sections)
+    return build_scheduler(config, model, params, cfg)
 
 
 # registers SCHEDULES["spec"]; the bottom import keeps the cycle harmless

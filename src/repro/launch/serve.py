@@ -32,6 +32,15 @@ The paper's serving shape (ch. 2/5/14), end to end:
     sampling, bounded `--max-in-flight` window) and gates admission on the
     costmodel-predicted token latency against `--slo-ms` (the paper's
     unfinished overlapping-streams path, §2.4).
+  * **chunked prefill** — `--prefill-chunk C` admits a long prompt as a
+    sequence of fixed-size chunk programs (one ProgramCache entry per chunk
+    size) written incrementally into the lane's cache, with decode windows
+    between chunks: the SLO admission gate schedules each chunk like any
+    other dispatch, so in-flight decodes never stall behind one monolithic
+    prefill — and greedy token streams stay bit-identical to unchunked.
+    `--ring-prefill-min N` (mesh only) routes monolithic prefills of >= N
+    tokens through ring attention over the "model" axis — the
+    context-parallel path for prompts beyond one device's cache slab.
   * **speculative decoding** — `--schedule spec` serves draft->verify
     windows on the async stream: a drafter (`--draft shrink` depth-pruned
     second model, optionally loaded from a `launch.distill` checkpoint via
@@ -58,6 +67,7 @@ parses arguments, builds the model/requests, and reports.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from collections import Counter
 
@@ -68,8 +78,10 @@ from repro import configs
 from repro.core import hal
 from repro.core.dispatch import (AsyncExecutionStream, ExecutionStream,
                                  KernelDispatcher, ProgramCache)
-from repro.launch.scheduler import SAMPLING_MODES, SCHEDULES, Request, \
-    make_scheduler, merge_prefill_caches
+from repro.launch.scheduler import (SAMPLING_MODES, SCHEDULES, ChunkConfig,
+                                    PrefixConfig, Request, ServeConfig,
+                                    SLOConfig, SpecConfig, build_scheduler,
+                                    merge_prefill_caches)
 from repro.launch.speculative import DRAFT_KINDS
 from repro.models.model import build_model
 from repro.optim.compression import compress_model_params
@@ -164,6 +176,19 @@ def run(argv=None) -> dict:
     ap.add_argument("--prefix-block-size", type=int, default=8,
                     help="prefix cache only: tokens per block (should divide "
                          "the prefill buckets, or chains never anchor)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous/slo schedules: admit a long prompt as "
+                         "fixed-size chunk programs (one ProgramCache entry "
+                         "per chunk size) written incrementally into the "
+                         "lane, with decode windows between chunks — the "
+                         "SLO gate schedules each chunk like any dispatch "
+                         "instead of stalling behind a monolithic prefill")
+    ap.add_argument("--ring-prefill-min", type=int, default=None,
+                    help="with --mesh-shape only: route monolithic prefills "
+                         "of at least this many tokens through ring "
+                         "attention (context-parallel over the 'model' "
+                         "axis); default off — keeps mesh streams "
+                         "bit-identical to single-device")
     ap.add_argument("--ckpt", default="",
                     help="load target params from this CheckpointManager "
                          "directory (e.g. a `launch.distill` run's teacher/ "
@@ -217,6 +242,14 @@ def run(argv=None) -> dict:
         ctx = parse_mesh(args.mesh_shape)
     except ValueError as e:
         ap.error(str(e))
+    if args.ring_prefill_min is not None:
+        if not ctx.active or ctx.axis_size("model") <= 1:
+            ap.error("--ring-prefill-min needs --mesh-shape with a >1 "
+                     "'model' axis: the ring rotates KV over that axis")
+        # consumed at model build: attention's prefill branch reads it off
+        # the context, so the route is baked into the compiled program
+        ctx = dataclasses.replace(ctx,
+                                  ring_prefill_min=args.ring_prefill_min)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
     target = hal.get_target(args.target)
@@ -247,41 +280,54 @@ def run(argv=None) -> dict:
     max_len = max(lens) + args.gen
 
     program_cache = ProgramCache()
-    extra = {}
-    if args.schedule == "slo":
+    if args.schedule in ("slo", "spec"):
         stream = AsyncExecutionStream(program_cache, target=target,
                                       max_in_flight=args.max_in_flight)
-        extra = {"slo_ms": args.slo_ms, "max_in_flight": args.max_in_flight}
-    elif args.schedule == "spec":
-        stream = AsyncExecutionStream(program_cache, target=target,
-                                      max_in_flight=args.max_in_flight)
-        extra = {"draft_depth": args.draft_depth, "draft": args.draft,
-                 "draft_ckpt": args.draft_ckpt or None,
-                 "draft_branches": args.draft_branches}
     else:
         stream = ExecutionStream(program_cache, target=target)
-    if args.prefix_cache:
-        if args.schedule not in ("continuous", "slo"):
-            ap.error(f"--prefix-cache serves --schedule continuous or slo, "
-                     f"not {args.schedule}")
-        extra.update(prefix_cache=True, prefix_blocks=args.prefix_blocks,
-                     prefix_block_size=args.prefix_block_size)
+
+    # typed serve configuration: each schedule-specific knob group is a
+    # section, and ServeConfig.validate() rejects a section the chosen
+    # schedule cannot apply — a misplaced flag fails here, loudly, instead
+    # of vanishing into a silently-stripped kwarg
+    slo_cfg = SLOConfig(slo_ms=args.slo_ms,
+                        max_in_flight=args.max_in_flight) \
+        if args.schedule == "slo" else None
+    spec_cfg = SpecConfig(draft_depth=args.draft_depth, draft=args.draft,
+                          draft_ckpt=args.draft_ckpt or None,
+                          draft_branches=args.draft_branches,
+                          max_in_flight=args.max_in_flight) \
+        if args.schedule == "spec" else None
+    prefix_cfg = PrefixConfig(blocks=args.prefix_blocks,
+                              block_size=args.prefix_block_size) \
+        if args.prefix_cache else None
+    chunk_cfg = ChunkConfig(prefill_chunk=args.prefill_chunk,
+                            ring_min=args.ring_prefill_min) \
+        if (args.prefill_chunk is not None
+            or args.ring_prefill_min is not None) else None
+
     def make_sched(sctx, pool):
         # the supervisor rebuilds the scheduler on the shrunken mesh after
         # an evacuation; the stream (floor ledger) and program cache carry
-        # across, the paged pool rides in via prefix_pool. The model's
+        # across, the paged pool rides in via prefix.pool. The model's
         # internal sharding constraints are baked against its build mesh,
         # so a rescaled context needs a rebuilt model closure (params are
         # mesh-independent and re-place through the scheduler).
         m = model if sctx is ctx else build_model(cfg, sctx,
                                                   dispatcher=dispatcher)
-        skw = dict(extra)
+        pfx = prefix_cfg
         if pool is not None:
-            skw["prefix_pool"] = pool
-        return make_scheduler(args.schedule, m, params, cfg,
-                              n_slots=args.batch, max_len=max_len,
-                              sampling=args.sampling, seed=args.seed,
-                              stream=stream, ctx=sctx, **skw)
+            pfx = dataclasses.replace(prefix_cfg or PrefixConfig(),
+                                      pool=pool)
+        config = ServeConfig(schedule=args.schedule, max_len=max_len,
+                             n_slots=args.batch, sampling=args.sampling,
+                             seed=args.seed, stream=stream, ctx=sctx,
+                             slo=slo_cfg, spec=spec_cfg, prefix=pfx,
+                             chunk=chunk_cfg)
+        try:
+            return build_scheduler(config, m, params, cfg)
+        except ValueError as e:
+            ap.error(str(e))
 
     supervisor = None
     if use_supervisor:
@@ -333,6 +379,12 @@ def run(argv=None) -> dict:
         prefix_note = (f" | prefix cache: {pc['hits']} hits / "
                        f"{pc['misses']} misses, {pc['hit_tokens']} prefill "
                        f"tokens skipped, {pc['evictions']} evictions")
+    chunk_note = ""
+    if args.prefill_chunk is not None:
+        cp = stats["chunked_prefill"]
+        chunk_note = (f" | chunked prefill C={cp['prefill_chunk']}: "
+                      f"{cp['n_chunks']} chunks / {cp['chunk_tokens']} "
+                      f"prompt tokens")
     mesh_note = ""
     if ctx.active:
         mesh_note = (f" | mesh {args.mesh_shape}: {stats['n_hosts']} hosts, "
@@ -362,7 +414,8 @@ def run(argv=None) -> dict:
           f"dispatches, floor/request "
           f"{stats['per_request_dispatch_overhead_s']*1e6:.1f} us | "
           f"program cache h{program_cache.stats.hits}/"
-          f"m{program_cache.stats.misses}{mesh_note}{prefix_note}{slo_note}")
+          f"m{program_cache.stats.misses}{mesh_note}{prefix_note}"
+          f"{chunk_note}{slo_note}")
     return out
 
 

@@ -274,6 +274,13 @@ class SpeculativeSchedule(ContinuousSchedule):
                 "both caches resident per block and the pool only pages the "
                 "target's. Serve prefix-cached traffic with "
                 "--schedule continuous or slo.")
+        if kw.get("prefill_chunk") is not None:
+            raise ValueError(
+                "SpeculativeSchedule does not chunk prefill: admission "
+                "stages the target AND drafter caches jointly, and the "
+                "chunked staging path only carries the target's. Serve "
+                "chunked-prefill traffic with --schedule continuous or slo.")
+        kw.pop("prefill_chunk", None)
         if stream is None:
             stream = AsyncExecutionStream(program_cache, target=target,
                                           max_in_flight=max_in_flight)

@@ -302,6 +302,7 @@ def attention_forward(
     *,
     mode: str = "train",          # train | prefill | decode
     cache: Params | None = None,
+    ctx=None,                     # ParallelContext: ring-prefill routing
 ) -> tuple[jnp.ndarray, Params | None]:
     if cfg.use_mla:
         return _mla_forward(cfg, p, x, positions, mode=mode, cache=cache)
@@ -310,7 +311,11 @@ def attention_forward(
     disp = dsp.active_dispatcher()
 
     if mode in ("train", "prefill"):
-        if disp is not None and cfg.attn_window is None:
+        if _ring_routed(cfg, ctx, mode, s):
+            # context-parallel prefill: KV blocks rotate around the mesh
+            from repro.parallel.ring_attention import ring_prefill
+            out = ring_prefill(q, k, v, ctx, causal=True)
+        elif disp is not None and cfg.attn_window is None:
             # the fused-attention cell of the op-by-device matrix
             out = dsp.flash_route(disp, q, k, v, causal=True)
         else:
@@ -319,10 +324,10 @@ def attention_forward(
         new_cache = None
         if mode == "prefill":
             new_cache = _write_prefill_cache(cfg, k, v, positions)
-    else:  # decode: s == 1
+    else:  # decode: one step (s == 1) or a prefill chunk (s == C)
         assert cache is not None
         cache = _append_cache(cfg, cache, {"k": k, "v": v}, positions)
-        if disp is not None:
+        if s == 1 and disp is not None:
             out = dsp.decode_route(
                 disp, q[:, 0], cache["k"], cache["v"], cache["pos"],
                 positions[:, 0], window=cfg.attn_window)[:, None]
@@ -331,6 +336,18 @@ def attention_forward(
         new_cache = cache
     out = dsp.linear(out, p["wo"], n_contract=2, bias=p.get("bo"))
     return out, new_cache
+
+
+def _ring_routed(cfg, ctx, mode: str, s: int) -> bool:
+    """Whether this prefill routes through ring attention: opt-in via
+    `ParallelContext.ring_prefill_min`, full-causal layers only (window
+    layers keep the local path — their KV never exceeds one slab), and only
+    when the model axis actually has ranks to rotate KV around."""
+    return (mode == "prefill" and ctx is not None
+            and getattr(ctx, "ring_prefill_min", None) is not None
+            and cfg.attn_window is None
+            and ctx.axis_size("model") > 1
+            and s >= ctx.ring_prefill_min)
 
 
 def _write_prefill_cache(cfg, k, v, positions):
@@ -348,35 +365,74 @@ def _write_prefill_cache(cfg, k, v, positions):
 
 
 def _append_cache(cfg, cache, kv_new, positions):
-    """Write the new token at slot pos % size (rolling for window layers)."""
+    """Write the new tokens at slot pos % size (rolling for window layers).
+
+    s == 1 is the decode step. s > 1 is a prefill chunk: the writes run as a
+    sequential fori_loop so a chunk longer than a ring window wraps exactly
+    like s decode steps would (later positions overwrite the oldest slots)."""
     size = cache["pos"].shape[1]
-    pos = positions[:, 0]                       # (B,)
-    slot = pos % size
-    bidx = jnp.arange(pos.shape[0])
-    out = dict(cache)
-    for name in kv_new:
-        out[name] = cache[name].at[bidx, slot].set(
-            kv_new[name][:, 0].astype(cache[name].dtype))
-    out["pos"] = cache["pos"].at[bidx, slot].set(pos)
-    return out
+    b, s = positions.shape
+    if s == 1:
+        pos = positions[:, 0]                   # (B,)
+        slot = pos % size
+        bidx = jnp.arange(pos.shape[0])
+        out = dict(cache)
+        for name in kv_new:
+            out[name] = cache[name].at[bidx, slot].set(
+                kv_new[name][:, 0].astype(cache[name].dtype))
+        out["pos"] = cache["pos"].at[bidx, slot].set(pos)
+        return out
+
+    names = sorted(kv_new)
+
+    def write(i, cur):
+        pos_i = jax.lax.dynamic_index_in_dim(positions, i, 1, False)  # (B,)
+        slot = pos_i % size
+        out = dict(cur)
+        for name in names:
+            row = jax.lax.dynamic_index_in_dim(kv_new[name], i, 1, False)
+            out[name] = jax.vmap(
+                lambda c, r, sl: jax.lax.dynamic_update_index_in_dim(
+                    c, r, sl, 0))(cur[name], row.astype(cur[name].dtype), slot)
+        out["pos"] = jax.vmap(
+            lambda c, pz, sl: jax.lax.dynamic_update_index_in_dim(
+                c, pz, sl, 0))(cur["pos"], pos_i, slot)
+        return out
+
+    return jax.lax.fori_loop(0, s, write, dict(cache))
 
 
 def _decode_attention(cfg, q, cache, positions):
-    """q: (B, 1, H, dh) against cache (B, Smax, KV, dh) with validity mask."""
-    b, _, h, dh = q.shape
+    """q: (B, S, H, dh) against cache (B, Smax, KV, dh) with validity mask.
+    S == 1 is the decode step (kept on its exact historical path); S > 1 is
+    a prefill chunk, each query masked to its own causal horizon."""
+    b, sq, h, dh = q.shape
     kvh = cache["k"].shape[2]
     g = h // kvh
-    qg = q.reshape(b, 1, kvh, g, dh)
-    s = jnp.einsum("bqkgd,bckd->bkgc", qg.astype(jnp.float32),
+    if sq == 1:
+        qg = q.reshape(b, 1, kvh, g, dh)
+        s = jnp.einsum("bqkgd,bckd->bkgc", qg.astype(jnp.float32),
+                       cache["k"].astype(jnp.float32)) * dh ** -0.5
+        cur = positions[:, 0][:, None]          # (B,1)
+        valid = (cache["pos"] >= 0) & (cache["pos"] <= cur)
+        if cfg.attn_window:
+            valid &= (cur - cache["pos"]) < cfg.attn_window
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgc,bckd->bkgd", w, cache["v"].astype(jnp.float32))
+        return out.reshape(b, 1, h, dh).astype(q.dtype)
+    qg = q.reshape(b, sq, kvh, g, dh)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg.astype(jnp.float32),
                    cache["k"].astype(jnp.float32)) * dh ** -0.5
-    cur = positions[:, 0][:, None]              # (B,1)
-    valid = (cache["pos"] >= 0) & (cache["pos"] <= cur)
+    cpos = cache["pos"][:, None, :]             # (B,1,Smax)
+    cur = positions[:, :, None]                 # (B,S,1)
+    valid = (cpos >= 0) & (cpos <= cur)
     if cfg.attn_window:
-        valid &= (cur - cache["pos"]) < cfg.attn_window
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        valid &= (cur - cpos) < cfg.attn_window
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgc,bckd->bkgd", w, cache["v"].astype(jnp.float32))
-    return out.reshape(b, 1, h, dh).astype(q.dtype)
+    out = jnp.einsum("bqkgc,bckd->bqkgd", w, cache["v"].astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -422,31 +478,38 @@ def _mla_forward(cfg, p, x, positions, *, mode, cache):
             new_cache = {"c_kv": c_kv, "k_rope": k_rope, "pos": positions}
     else:
         assert cache is not None
-        size = cache["pos"].shape[1]
-        pos = positions[:, 0]
-        slot = pos % size
-        bidx = jnp.arange(b)
-        cache = dict(cache)
-        cache["c_kv"] = cache["c_kv"].at[bidx, slot].set(
-            c_kv[:, 0].astype(cache["c_kv"].dtype))
-        cache["k_rope"] = cache["k_rope"].at[bidx, slot].set(
-            k_rope[:, 0].astype(cache["k_rope"].dtype))
-        cache["pos"] = cache["pos"].at[bidx, slot].set(pos)
+        cache = _append_cache(cfg, cache, {"c_kv": c_kv, "k_rope": k_rope},
+                              positions)
         # absorbed decode: scores in latent space (paper-grade MLA serving)
         w_k = p["wkv_b"][..., : cfg.qk_nope_dim]            # (L, H, nope)
         w_v = p["wkv_b"][..., cfg.qk_nope_dim:]             # (L, H, v)
-        q_lat = einsum32("bqhn,lhn->bqhl", q_nope, w_k)     # (B,1,H,L)
-        s_lat = jnp.einsum("bqhl,bcl->bhc", q_lat.astype(jnp.float32),
-                           cache["c_kv"].astype(jnp.float32))
-        s_rope = jnp.einsum("bqhr,bcr->bhc", q_rope.astype(jnp.float32),
-                            cache["k_rope"].astype(jnp.float32))
-        sc = (s_lat + s_rope) * scale
-        valid = (cache["pos"] >= 0) & (cache["pos"] <= pos[:, None])
-        sc = jnp.where(valid[:, None, :], sc, NEG_INF)
-        w = jax.nn.softmax(sc, axis=-1)
-        ctx = jnp.einsum("bhc,bcl->bhl", w,
-                         cache["c_kv"].astype(jnp.float32)).astype(x.dtype)
-        out = einsum32("bhl,lhv->bhv", ctx, w_v)[:, None]   # (B,1,H,v)
+        q_lat = einsum32("bqhn,lhn->bqhl", q_nope, w_k)     # (B,S,H,L)
+        if s == 1:
+            pos = positions[:, 0]
+            s_lat = jnp.einsum("bqhl,bcl->bhc", q_lat.astype(jnp.float32),
+                               cache["c_kv"].astype(jnp.float32))
+            s_rope = jnp.einsum("bqhr,bcr->bhc", q_rope.astype(jnp.float32),
+                                cache["k_rope"].astype(jnp.float32))
+            sc = (s_lat + s_rope) * scale
+            valid = (cache["pos"] >= 0) & (cache["pos"] <= pos[:, None])
+            sc = jnp.where(valid[:, None, :], sc, NEG_INF)
+            w = jax.nn.softmax(sc, axis=-1)
+            ctx = jnp.einsum("bhc,bcl->bhl", w,
+                             cache["c_kv"].astype(jnp.float32)).astype(x.dtype)
+            out = einsum32("bhl,lhv->bhv", ctx, w_v)[:, None]  # (B,1,H,v)
+        else:  # prefill chunk: S queries, each masked to its own horizon
+            s_lat = jnp.einsum("bqhl,bcl->bqhc", q_lat.astype(jnp.float32),
+                               cache["c_kv"].astype(jnp.float32))
+            s_rope = jnp.einsum("bqhr,bcr->bqhc", q_rope.astype(jnp.float32),
+                                cache["k_rope"].astype(jnp.float32))
+            sc = (s_lat + s_rope) * scale
+            cpos = cache["pos"][:, None, :]                 # (B,1,Smax)
+            valid = (cpos >= 0) & (cpos <= positions[:, :, None])
+            sc = jnp.where(valid[:, :, None, :], sc, NEG_INF)
+            w = jax.nn.softmax(sc, axis=-1)
+            ctx = jnp.einsum("bqhc,bcl->bqhl", w,
+                             cache["c_kv"].astype(jnp.float32)).astype(x.dtype)
+            out = einsum32("bqhl,lhv->bqhv", ctx, w_v)      # (B,S,H,v)
         new_cache = cache
     out = dsp.linear(out, p["wo"], n_contract=2)
     return out, new_cache

@@ -222,6 +222,24 @@ class Model:
             lg = logits_fn(self.cfg, params["embed"], h)
         return caches, lg
 
+    def prefill_chunk(self, params, caches, tokens, pos0):
+        """One prefill chunk: C prompt tokens written into decode-shaped
+        `caches` as if they were C fused decode steps.
+
+        tokens: (B, C) int32 prompt slice; pos0: (B,) int32 absolute
+        position of tokens[:, 0]. Returns (caches, last-token logits) —
+        the same contract as `prefill`, so the scheduler's donated
+        admission path treats the staging cache like a prefill cache. The
+        shape (B, C) is the whole program signature: every chunk of every
+        prompt reuses one ProgramCache entry per chunk size."""
+        b, c = tokens.shape
+        positions = pos0[:, None] + jnp.arange(c, dtype=pos0.dtype)[None]
+        h, caches, _ = self.forward(params, tokens, positions, mode="decode",
+                                    caches=caches)
+        with self._dispatch_scope():
+            lg = logits_fn(self.cfg, params["embed"], h[:, -1:])
+        return caches, lg
+
     # ------------------------------------------------------------------
     # Dry-run stand-ins
     # ------------------------------------------------------------------

@@ -82,7 +82,7 @@ def rglru_forward(
         new_cache = None
         if mode == "prefill":
             new_cache = {"h": h[:, -1].astype(xin.dtype), "conv": conv_state}
-    else:  # decode
+    elif s == 1:  # decode
         assert cache is not None
         xi, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"],
                                       state=cache["conv"])
@@ -90,6 +90,19 @@ def rglru_forward(
         h = a[:, 0] * cache["h"].astype(jnp.float32) + b[:, 0]
         new_cache = {"h": h.astype(xin.dtype), "conv": conv_state}
         h = h[:, None]
+    else:  # prefill chunk: scan resumed from the carried hidden state
+        assert cache is not None
+        xi, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"],
+                                      state=cache["conv"])
+        a, b = _gates(p, xi)                              # (B,S,w)
+        # fold h_{-1} into the first scan element: h_0 = a_0 h_{-1} + b_0
+        b = b.at[:, 0].add(a[:, 0] * cache["h"].astype(jnp.float32))
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_cache = {"h": h[:, -1].astype(xin.dtype), "conv": conv_state}
     out = dot((h.astype(xin.dtype) * gate), p["out"])
     return out, new_cache
 

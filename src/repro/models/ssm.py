@@ -199,7 +199,7 @@ def ssm_forward(
         if mode == "prefill":
             new_cache = {"state": state.astype(xin.dtype),
                          "conv_x": conv_x_state, "conv_bc": conv_bc_state}
-    else:  # decode: s == 1, O(1) state update
+    elif s == 1:  # decode: O(1) state update
         assert cache is not None
         xs, conv_x_state = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"],
                                         state=cache["conv_x"])
@@ -219,6 +219,21 @@ def ssm_forward(
         y = jnp.einsum("bhn,bhpn->bhp", ch, state)
         y = y + x.astype(jnp.float32) * p["d_skip"][:, None]
         y = y[:, None]                                            # (B,1,H,P)
+        new_cache = {"state": state.astype(xin.dtype),
+                     "conv_x": conv_x_state, "conv_bc": conv_bc_state}
+    else:  # prefill chunk: SSD scan resumed from the carried state
+        assert cache is not None
+        xs, conv_x_state = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"],
+                                        state=cache["conv_x"])
+        bc, conv_bc_state = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"],
+                                         state=cache["conv_bc"])
+        x = xs.reshape(bsz, s, h, pdim)
+        b = bc[..., : g * n].reshape(bsz, s, g, n)
+        c = bc[..., g * n:].reshape(bsz, s, g, n)
+        y, state = _ssd_chunked(
+            x, dt, a, b, c, cfg.ssm_chunk,
+            init_state=cache["state"].astype(jnp.float32))
+        y = y + x.astype(jnp.float32) * p["d_skip"][None, None, :, None]
         new_cache = {"state": state.astype(xin.dtype),
                      "conv_x": conv_x_state, "conv_bc": conv_bc_state}
 

@@ -82,7 +82,7 @@ def apply_layer(
                                                  cache=cache)
     else:
         out, new_cache = attn_lib.attention_forward(
-            cfg, p["mix"], h, positions, mode=mode, cache=cache)
+            cfg, p["mix"], h, positions, mode=mode, cache=cache, ctx=ctx)
     x = x + out
 
     h = apply_norm(cfg, p["ln2"], x)

@@ -23,6 +23,12 @@ class ParallelContext:
     use_ep: bool = True            # expert-parallel MoE (shard_map all_to_all)
     zero1: bool = True             # shard optimizer state over the data axes
     remat: str = "full"            # full | dots | none
+    # Ring-attention prefill threshold: prompts of at least this many tokens
+    # route prefill attention through `parallel.ring_attention` (the
+    # context-parallel path for sequences beyond one device's cache slab).
+    # None keeps every prefill on the local flash path — the default, so
+    # mesh serving stays bit-identical to single-device unless opted in.
+    ring_prefill_min: int | None = None
 
     # ------------------------------------------------------------------
     @property

@@ -81,3 +81,33 @@ def ring_attention(
     spec = P(None, axis, None, None)
     return shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
                      out_specs=spec, check_rep=False)(q, k, v)
+
+
+def ring_prefill(
+    q: jnp.ndarray,            # (B, S, H, dh)
+    k: jnp.ndarray,            # (B, S, KV, dh)
+    v: jnp.ndarray,            # (B, S, KV, dh)
+    ctx,                       # ParallelContext
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Serve-path wrapper around `ring_attention`: the degenerate ring (null
+    context or a 1-rank model axis) falls back to the monolithic flash path,
+    and a ragged sequence pads up to the ring multiple — causal masking keeps
+    the padded tail keys inert for every real query (their positions are
+    strictly greater), so the slice back is exact."""
+    if ctx is None or not ctx.active or ctx.axis_size("model") <= 1:
+        from repro.models.attention import chunked_attention
+        return chunked_attention(q, k, v, causal=causal, scale=scale)
+    assert causal, "ring_prefill pads the sequence; needs causal masking"
+    m = ctx.axis_size("model")
+    s = q.shape[1]
+    pad = (-s) % m
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    out = ring_attention(q, k, v, ctx.mesh, causal=True, scale=scale)
+    return out[:, :s]

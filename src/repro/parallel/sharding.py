@@ -255,6 +255,14 @@ def serve_arena_specs(arenas, ctx: ParallelContext):
     return jax.tree.map(lambda _: P(), arenas)
 
 
+def serve_staging_specs(staging, ctx: ParallelContext):
+    """Chunked-prefill staging caches replicate: they are batch-1 scratch
+    with no lane dim to span hosts (`serve_cache_specs`' batch rule would
+    not divide anyway), and the donated admission merge that lands them
+    into a lane needs every rank to hold the whole chunk state."""
+    return jax.tree.map(lambda _: P(), staging)
+
+
 def cache_specs(caches, ctx: ParallelContext, *, seq_fallback: bool = False):
     """Cache pytree specs: stacked leading layer dim shifts cache rules.
 

@@ -1,0 +1,272 @@
+"""Chunked prefill + ServeConfig suite (tier: chunked prefill/long context).
+
+Load-bearing properties of the chunked-prefill admission path
+(`--prefill-chunk`) and the typed `ServeConfig` construction API:
+
+  * **token-exact parity** — admitting a long prompt as fixed-size chunk
+    programs (decode-mode forwards written incrementally into a batch-1
+    staging cache, admitted via the donated `_admit_into_slot` path) emits
+    exactly the unchunked continuous/SLO/sequential token stream, per
+    request, across attention, SSM, RG-LRU, windowed and MLA families.
+  * **bounded compile set** — every chunk of a given size shares ONE
+    ProgramCache entry (the staging cache is decode-shaped whatever the
+    prompt), so heterogeneous prompts compile {1 chunk + 1 decode} instead
+    of one prefill program per bucket.
+  * **floor-charged chunks** — each chunk is a `DispatchRecord` on the
+    scheduler's stream carrying its token `span`; the spans of one prompt
+    tile [0, target) exactly.
+  * **pool interop** — chunked cold admissions insert whole blocks from the
+    staging cache (chunk-boundary anchors), and later identical prompts
+    admit from residency, token-exact.
+  * **loud configuration** — `ServeConfig` sections reject schedules they
+    cannot apply to; the legacy `make_scheduler(**kw)` shim raises on
+    unknown keywords, warns before dropping inapplicable ones, and emits a
+    DeprecationWarning on every call.
+"""
+
+import functools
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import hal
+from repro.core.dispatch import (AsyncExecutionStream, ExecutionStream,
+                                 ProgramCache)
+from repro.launch.scheduler import (ChunkConfig, PrefixConfig, Request,
+                                    ServeConfig, SLOConfig, SpecConfig,
+                                    build_scheduler, make_scheduler)
+from repro.launch.speculative import SpeculativeSchedule
+from repro.models.model import build_model
+
+V5E = hal.get_target("tpu-v5e")
+
+# heterogeneous on purpose: below one chunk (reset admission), chunk-exact,
+# ragged last chunk, and a multi-chunk prompt
+CHUNK_LENS = [24, 6, 17, 16, 33]
+
+
+@functools.lru_cache(maxsize=None)
+def _served_model(arch: str):
+    cfg = configs.get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, lens, gen, seed=1):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=(L,)).astype(np.int32),
+                    max_new_tokens=gen)
+            for i, L in enumerate(lens)]
+
+
+def _serve(arch, schedule, lens, gen, *, chunk=None, prefix=None,
+           n_slots=3, rounds=1, slo=None):
+    cfg, model, params = _served_model(arch)
+    cache = ProgramCache()
+    stream = (AsyncExecutionStream(cache, target=V5E) if schedule == "slo"
+              else ExecutionStream(cache, target=V5E))
+    config = ServeConfig(
+        schedule=schedule, max_len=max(lens) + gen, n_slots=n_slots,
+        stream=stream, slo=slo,
+        prefix=PrefixConfig(**prefix) if prefix is not None else None,
+        chunk=ChunkConfig(prefill_chunk=chunk) if chunk is not None else None)
+    sched = build_scheduler(config, model, params, cfg)
+    outs = [{r.rid: r for r in sched.run(_requests(cfg, lens, gen))}
+            for _ in range(rounds)]
+    return (outs[0] if rounds == 1 else outs), sched
+
+
+# ---------------------------------------------------------------------------
+# Token-exact parity: chunked vs unchunked vs sequential
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_chunked_matches_unchunked_continuous(chunk):
+    base, _ = _serve("tinyllama-1.1b", "continuous", CHUNK_LENS, gen=6)
+    out, sched = _serve("tinyllama-1.1b", "continuous", CHUNK_LENS, gen=6,
+                        chunk=chunk)
+    for rid in base:
+        np.testing.assert_array_equal(base[rid].tokens, out[rid].tokens)
+    st = sched.stats(len(CHUNK_LENS))
+    assert st["chunked_prefill"]["n_chunks"] > 0
+
+
+def test_chunked_matches_sequential_under_slo():
+    seq, _ = _serve("tinyllama-1.1b", "sequential", CHUNK_LENS, gen=6)
+    slo, _ = _serve("tinyllama-1.1b", "slo", CHUNK_LENS, gen=6, chunk=8,
+                    slo=SLOConfig(slo_ms=1e6))
+    for rid in seq:
+        np.testing.assert_array_equal(seq[rid].tokens, slo[rid].tokens)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "recurrentgemma-9b",
+                                  "deepseek-v3-671b", "phi4-mini-3.8b",
+                                  "command-r-35b"])
+def test_chunked_parity_across_families(arch):
+    """SSM state carry, RG-LRU hidden carry, MLA absorbed decode and
+    sliding-window wrap all survive chunk-at-a-time prefill bit-exactly
+    (greedy): the chunk branch is decode mode generalized from s=1 to
+    s=C, resumed from the carried cache."""
+    base, _ = _serve(arch, "continuous", CHUNK_LENS, gen=5)
+    out, _ = _serve(arch, "continuous", CHUNK_LENS, gen=5, chunk=8)
+    for rid in base:
+        np.testing.assert_array_equal(base[rid].tokens, out[rid].tokens)
+
+
+def test_categorical_streams_schedule_invariant_chunked():
+    cfg, model, params = _served_model("tinyllama-1.1b")
+    outs = {}
+    for chunk in (None, 8):
+        stream = ExecutionStream(ProgramCache(), target=V5E)
+        config = ServeConfig(
+            schedule="continuous", max_len=40, n_slots=2, stream=stream,
+            sampling="categorical", seed=7,
+            chunk=ChunkConfig(prefill_chunk=chunk) if chunk else None)
+        sched = build_scheduler(config, model, params, cfg)
+        outs[chunk] = {r.rid: r.tokens
+                       for r in sched.run(_requests(cfg, [26, 9], 5))}
+    for rid in outs[None]:
+        np.testing.assert_array_equal(outs[None][rid], outs[8][rid])
+
+
+# ---------------------------------------------------------------------------
+# Compile economics + floor accounting
+# ---------------------------------------------------------------------------
+
+def test_one_program_per_chunk_size():
+    """Heterogeneous prompts compile exactly one chunk program + one decode
+    program: the staging cache is decode-shaped for every prompt, so the
+    content hash collapses across buckets."""
+    _, sched = _serve("tinyllama-1.1b", "continuous", CHUNK_LENS, gen=4,
+                      chunk=8)
+    assert len(sched._chunk_keys) == 1
+    # unchunked compiles one prefill program per bucket touched instead
+    _, base = _serve("tinyllama-1.1b", "continuous", CHUNK_LENS, gen=4)
+    chunked_misses = sched.stream.cache.stats.misses
+    assert chunked_misses <= base.stream.cache.stats.misses
+
+
+def test_chunk_spans_tile_the_prefix_and_pay_floors():
+    lens = [33]
+    _, sched = _serve("tinyllama-1.1b", "continuous", lens, gen=3, chunk=8)
+    spans = sorted(r.span for r in sched.stream.records
+                   if r.span is not None)
+    target = 8 * ((33 - 1) // 8)
+    assert spans[0][0] == 0 and spans[-1][1] == target
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 == b0, "chunk spans must tile without gap or overlap"
+    # every chunk dispatch is floor-charged on the scheduler's own stream
+    chunk_recs = [r for r in sched.stream.records if r.span is not None]
+    assert len(chunk_recs) == len(spans)
+    assert all(r.floor_s == V5E.dispatch_floor_s for r in chunk_recs)
+
+
+def test_decode_windows_run_between_chunks():
+    """A long prompt arriving while another lane decodes must not stall it:
+    decode dispatches interleave between the chunk dispatches."""
+    cfg, model, params = _served_model("tinyllama-1.1b")
+    stream = ExecutionStream(ProgramCache(), target=V5E)
+    config = ServeConfig(schedule="continuous", max_len=72, n_slots=2,
+                         stream=stream, chunk=ChunkConfig(prefill_chunk=8))
+    sched = build_scheduler(config, model, params, cfg)
+    reqs = _requests(cfg, [6, 64], gen=8)
+    reqs[1] = Request(rid=1, prompt=reqs[1].prompt, max_new_tokens=8,
+                      arrival=2)
+    sched.run(reqs)
+    seqs = [r.seq for r in stream.records if r.span is not None]
+    decode_seqs = [r.seq for r in stream.records
+                   if r.span is None and r.batch >= 1 and r.key
+                   in {k for _, k in sched._decode_memo.values()}]
+    interleaved = [s for s in decode_seqs if seqs[0] < s < seqs[-1]]
+    assert interleaved, ("no decode dispatch ran between the first and "
+                        "last chunk: chunking failed to break "
+                        "head-of-line blocking")
+
+
+# ---------------------------------------------------------------------------
+# Prefix-pool interop
+# ---------------------------------------------------------------------------
+
+def test_chunked_cold_insert_then_prefix_hits():
+    rounds, sched = _serve("tinyllama-1.1b", "continuous", [26, 26, 26],
+                           gen=4, chunk=8, n_slots=1, rounds=2,
+                           prefix=dict(blocks=64, block_size=4))
+    base_rounds, _ = _serve("tinyllama-1.1b", "continuous", [26, 26, 26],
+                            gen=4, n_slots=1, rounds=2)
+    for rnd, brnd in zip(rounds, base_rounds):
+        for rid in rnd:
+            np.testing.assert_array_equal(rnd[rid].tokens, brnd[rid].tokens)
+    # chunk target 24 = 6 whole blocks: the chain anchors at the chunk
+    # boundary, so rounds after the first admit from residency
+    assert sched.pool.stats["hits"] >= 3
+    assert sched.pool.stats["misses"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig: loud sections, loud shim
+# ---------------------------------------------------------------------------
+
+def test_serve_config_rejects_inapplicable_sections():
+    with pytest.raises(ValueError, match="does not apply"):
+        ServeConfig(schedule="sequential", max_len=16,
+                    chunk=ChunkConfig(prefill_chunk=4)).validate()
+    with pytest.raises(ValueError, match="does not apply"):
+        ServeConfig(schedule="continuous", max_len=16,
+                    slo=SLOConfig(slo_ms=5.0)).validate()
+    with pytest.raises(ValueError, match="does not apply"):
+        ServeConfig(schedule="slo", max_len=16,
+                    spec=SpecConfig(draft_depth=2)).validate()
+    with pytest.raises(ValueError, match="block_size"):
+        ServeConfig(schedule="continuous", max_len=16,
+                    chunk=ChunkConfig(prefill_chunk=6),
+                    prefix=PrefixConfig(block_size=4)).validate()
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ChunkConfig(prefill_chunk=0)
+    with pytest.raises(ValueError, match="empty"):
+        ChunkConfig()
+
+
+def test_make_scheduler_shim_is_loud():
+    cfg, model, params = _served_model("tinyllama-1.1b")
+    # unknown keyword: TypeError, not a silent drop (the regression this
+    # API redesign exists to fix)
+    with pytest.raises(TypeError, match="unknown keyword"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            make_scheduler("continuous", model, params, cfg, n_slots=1,
+                           max_len=16, slo_mss=5.0)
+    # schedule-inapplicable knob: warned before being dropped
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sched = make_scheduler("continuous", model, params, cfg, n_slots=1,
+                               max_len=16, slo_ms=5.0)
+    cats = {x.category for x in w}
+    assert DeprecationWarning in cats and UserWarning in cats
+    assert not hasattr(sched, "slo_s")
+    # legacy behavior preserved: sequential strips the prefix knobs
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        seq = make_scheduler("sequential", model, params, cfg, max_len=16,
+                             n_slots=1, prefix_cache=True)
+    assert not hasattr(seq, "pool")
+    assert any(x.category is UserWarning for x in w)
+
+
+def test_chunking_rejected_where_it_cannot_apply():
+    cfg, model, params = _served_model("tinyllama-1.1b")
+    with pytest.raises(ValueError, match="chunk"):
+        SpeculativeSchedule(model, params, cfg, n_slots=1, max_len=16,
+                            prefill_chunk=4)
+    ecfg, emodel, eparams = _served_model("whisper-small")
+    with pytest.raises(ValueError, match="encdec"):
+        build_scheduler(
+            ServeConfig(schedule="continuous", max_len=16,
+                        chunk=ChunkConfig(prefill_chunk=4)),
+            emodel, eparams, ecfg)
