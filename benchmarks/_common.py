@@ -46,7 +46,10 @@ def make_requests(cfg, lens, gen: int, *, rid0: int = 0, seed: int = 0):
     return [Request(rid=rid0 + i,
                     prompt=rng.integers(0, cfg.vocab,
                                         size=(L,)).astype(np.int32),
-                    max_new_tokens=gen)
+                    max_new_tokens=gen,
+                    frames=(np.asarray(rng.normal(size=cfg.frame_shape),
+                                       np.float32)
+                            if cfg.family == "encdec" else None))
             for i, L in enumerate(lens)]
 
 

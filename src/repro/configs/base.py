@@ -58,9 +58,12 @@ class ModelConfig:
     # --- hybrid (RG-LRU / RecurrentGemma) ---
     block_pattern: tuple[str, ...] = ()   # e.g. ("rglru", "rglru", "attn")
     lru_width: int = 0
-    # --- encoder-decoder (Whisper backbone; conv frontend stubbed) ---
+    # --- encoder-decoder (Whisper backbone) ---
     n_encoder_layers: int = 0
     encoder_len: int = 0
+    n_mels: int = 0                  # >0: conv stem eats mel frames
+    stem_width: int = 3              # conv-stem kernel width (time axis)
+    stem_stride: int = 2             # second stem conv's time downsample
     # --- numerics / technique knobs ---
     dtype: str = "bfloat16"          # activation/weight compute dtype
     logits_fp32: bool = True         # the paper's "wider anchor" rule (§3.9)
@@ -116,6 +119,16 @@ class ModelConfig:
 
     def layer_is_moe(self, layer_idx: int) -> bool:
         return self.n_experts > 0 and layer_idx >= self.n_dense_layers
+
+    @property
+    def frame_shape(self) -> tuple[int, int]:
+        """Per-request encoder input (frames, features). With a conv stem
+        (`n_mels > 0`) the encoder eats `stem_stride * encoder_len` mel
+        frames of width `n_mels`; without one it eats pre-projected
+        `d_model` features directly (the seed's stubbed frontend)."""
+        if self.n_mels:
+            return (self.stem_stride * self.encoder_len, self.n_mels)
+        return (self.encoder_len, self.d_model)
 
 
 @dataclasses.dataclass(frozen=True)

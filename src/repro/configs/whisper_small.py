@@ -1,8 +1,11 @@
-"""whisper-small [audio]: enc-dec, conv frontend STUB [arXiv:2212.04356].
+"""whisper-small [audio]: enc-dec with a real conv stem [arXiv:2212.04356].
 
-Per assignment the modality frontend is a stub: `input_specs()` provides
-precomputed frame embeddings (B, 1500, d_model); the transformer backbone
-(12L encoder + 12L decoder with cross-attention) is what we build.
+The modality frontend is Whisper's two-conv stem: `input_specs()` provides
+log-mel frames (B, 3000, 80); two width-3 1-D convs (the second stride-2)
+with GELU project them to (B, 1500, d_model) before the 12L encoder. The
+stem runs through the conv2d kernel family (fused LUT-GELU epilogue when
+dispatched); the transformer backbone is the 12L+12L enc-dec with
+cross-attention.
 """
 from repro.configs.base import ModelConfig
 
@@ -11,5 +14,5 @@ CONFIG = ModelConfig(
     n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_head=64,
     d_ff=3072, vocab=51865,
     norm="layernorm", act="gelu_mlp", use_bias=True,
-    n_encoder_layers=12, encoder_len=1500,
+    n_encoder_layers=12, encoder_len=1500, n_mels=80,
 )

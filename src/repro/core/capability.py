@@ -51,6 +51,13 @@ def _one_op_graph(op: str) -> tuple[Callable, tuple]:
         "conv3d": (lambda a: jax.lax.conv_general_dilated(
             a.reshape(1, 1, 1, 4, 8), jnp.ones((1, 1, 1, 3, 3), jnp.float32),
             (1, 1, 1), "SAME"), (x,)),
+        "conv2d_transpose": (lambda a: jax.lax.conv_transpose(
+            a.reshape(1, 4, 8, 1), jnp.ones((3, 3, 1, 1), jnp.float32),
+            (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")),
+            (x,)),
+        "depthwise_conv2d": (lambda a: jax.lax.conv_general_dilated(
+            a.reshape(1, 2, 4, 4), jnp.ones((2, 1, 3, 3), jnp.float32),
+            (1, 1), "SAME", feature_group_count=2), (x,)),
         "softmax": (lambda a: jax.nn.softmax(a, axis=-1), (x,)),
         "avg_pool": (lambda a: jax.lax.reduce_window(
             a.reshape(1, 1, 4, 8), 0.0, jax.lax.add, (1, 1, 2, 2),
@@ -143,7 +150,8 @@ def census(target: Target, ops: list[str] | None = None) -> list[Verdict]:
 
 def _probe_ops() -> list[str]:
     x = jnp.ones((4, 8), jnp.float32)  # noqa: F841 — keep import-side-effect free
-    return ["matmul", "conv2d", "conv3d", "softmax", "layer_norm", "relu",
+    return ["matmul", "conv2d", "conv3d", "conv2d_transpose",
+            "depthwise_conv2d", "softmax", "layer_norm", "relu",
             "sigmoid", "tanh", "gelu", "exp", "log", "sin", "cos", "erf",
             "reduce_prod", "cumsum", "scatter", "gather", "one_hot",
             "transpose", "reshape", "concat", "slice", "pad",

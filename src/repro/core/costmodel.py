@@ -109,6 +109,9 @@ def param_count(cfg: ModelConfig) -> int:
             # carry cross-attention.
             p += _attn_params(cfg) + _mlp_params(cfg.d_model, cfg.d_ff, cfg.act)
         p += cfg.n_layers * _attn_params(cfg)         # cross-attn in decoder
+        if cfg.n_mels:                                # conv stem (+ biases)
+            p += cfg.stem_width * (cfg.n_mels + cfg.d_model) * cfg.d_model
+            p += 2 * cfg.d_model
     if cfg.mtp_depth:
         p += cfg.mtp_depth * (layer_params(cfg, cfg.n_layers - 1)
                               + 2 * cfg.d_model * cfg.d_model)
@@ -124,6 +127,9 @@ def active_param_count(cfg: ModelConfig) -> int:
     if cfg.n_encoder_layers:
         p += cfg.n_encoder_layers * (_attn_params(cfg) + _mlp_params(cfg.d_model, cfg.d_ff, cfg.act))
         p += cfg.n_layers * _attn_params(cfg)
+        if cfg.n_mels:
+            p += cfg.stem_width * (cfg.n_mels + cfg.d_model) * cfg.d_model
+            p += 2 * cfg.d_model
     return p
 
 

@@ -24,8 +24,12 @@ from jax.experimental import pallas as pl
 from repro.kernels.common import cdiv, interpret_mode, pad_to, select_from_table
 
 
-def _kernel(x_ref, xs_ref, sl_ref, ic_ref, cl_ref, o_ref, *, ane_mode: bool):
-    x = x_ref[...].astype(jnp.float32)
+def lut_eval(x, xs_ref, sl_ref, ic_ref, cl_ref, *, ane_mode: bool):
+    """The in-kernel PWL evaluation, shared verbatim by this kernel and the
+    fused `epilogue=` paths of anemm/conv — one body, so "fused" and
+    "kernel-then-LUT" are bit-identical by construction. `x` is an fp32
+    tile; the table refs are the (1, 33)/(1, 32)/(1, 32)/(1, 2) operands.
+    Returns the fp32 result tile (callers round at their own store)."""
     if ane_mode:
         x = jnp.where(jnp.isnan(x), jnp.inf, x)       # NaN -> +inf coercion
     # segment index: 32 vectorized compares (knots 1..32), no gather
@@ -41,6 +45,12 @@ def _kernel(x_ref, xs_ref, sl_ref, ic_ref, cl_ref, o_ref, *, ane_mode: bool):
     y = jnp.where(x > xs_ref[0, 32], hi_clamp, y)
     if ane_mode:
         y = y.astype(jnp.float16).astype(jnp.float32)  # fp16 output port
+    return y
+
+
+def _kernel(x_ref, xs_ref, sl_ref, ic_ref, cl_ref, o_ref, *, ane_mode: bool):
+    y = lut_eval(x_ref[...].astype(jnp.float32), xs_ref, sl_ref, ic_ref,
+                 cl_ref, ane_mode=ane_mode)
     o_ref[...] = y.astype(o_ref.dtype)
 
 

@@ -18,12 +18,47 @@ from repro.kernels.act_lut.act_lut import act_lut
 
 
 @functools.cache
-def _tables(name: str):
+def _tables_np(name: str):
     t = build_lut(name)
-    return (jnp.asarray(np.asarray(t.xs, np.float32)),
-            jnp.asarray(np.asarray(t.slopes, np.float32)),
-            jnp.asarray(np.asarray(t.intercepts, np.float32)),
-            jnp.asarray(np.asarray([t.lo_clamp, t.hi_clamp], np.float32)))
+    return (np.asarray(t.xs, np.float32),
+            np.asarray(t.slopes, np.float32),
+            np.asarray(t.intercepts, np.float32),
+            np.asarray([t.lo_clamp, t.hi_clamp], np.float32))
+
+
+def _tables(name: str):
+    # numpy is cached; the jnp conversion happens per call so a table first
+    # touched inside a jit trace never leaks a tracer into the cache
+    return tuple(jnp.asarray(a) for a in _tables_np(name))
+
+
+def lut_table_operands(name: str):
+    """The (1, 33)/(1, 32)/(1, 32)/(1, 2) fp32 operand arrays a kernel that
+    fuses this activation as an epilogue passes alongside its own inputs
+    (constant BlockSpecs; see anemm/conv)."""
+    xs, sl, ic, cl = _tables(name)
+    return (xs.reshape(1, 33), sl.reshape(1, 32), ic.reshape(1, 32),
+            cl.reshape(1, 2))
+
+
+def lut_apply_ref(x: jnp.ndarray, name: str, *, ane_mode: bool = True):
+    """Pure-jnp PWL evaluation — the oracle side of the fused epilogues and
+    the undispatched model path. Same arithmetic as `act_lut.lut_eval` (the
+    segment fetch is a gather here, a select tree there; the selected values
+    and the fp32 slope*x+icept are identical), so it agrees with the kernel
+    exactly."""
+    xs, sl, ic, cl = _tables(name)
+    xf = x.astype(jnp.float32)
+    if ane_mode:
+        xf = jnp.where(jnp.isnan(xf), jnp.inf, xf)
+    # count of knots 1..32 that are <= x == the kernel's compare sum
+    idx = jnp.clip(jnp.searchsorted(xs[1:], xf, side="right"), 0, 31)
+    y = sl[idx] * xf + ic[idx]
+    y = jnp.where(xf < xs[0], cl[0], y)
+    y = jnp.where(xf > xs[32], cl[1], y)
+    if ane_mode:
+        y = y.astype(jnp.float16).astype(jnp.float32)
+    return y.astype(x.dtype)
 
 
 def lut_activation(name: str, *, ane_mode: bool = True):

@@ -25,10 +25,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hal
 from repro.kernels import compat
+from repro.kernels.act_lut.act_lut import lut_eval
 from repro.kernels.common import cdiv, interpret_mode, pad_to, pick_block
 
 
-def _kernel(a_ref, b_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
+def _kernel(a_ref, b_ref, scale_ref, bias_ref, lut_refs, o_ref, acc_ref, *,
             nk: int, ane_mode: bool, out_dtype):
     k_idx = pl.program_id(2)
 
@@ -51,10 +52,20 @@ def _kernel(a_ref, b_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
             # the MAC output-port ceiling: |x| >= 2^15 -> +-inf (paper §3.7)
             acc = jnp.where(acc >= hal.ACCUM_OUT_CEILING, jnp.inf, acc)
             acc = jnp.where(acc <= -hal.ACCUM_OUT_CEILING, -jnp.inf, acc)
+        if lut_refs is not None:
+            # fused LUT activation (paper §3.5: the activation unit sits on
+            # the producing op's output port, no extra dispatch/HBM trip).
+            # Round to the out dtype first — the separate-op pipeline stores
+            # the matmul and reloads it through act_lut's fp32 widening, so
+            # this rounding is what makes fused == kernel-then-LUT, bit for
+            # bit.
+            acc = acc.astype(out_dtype).astype(jnp.float32)
+            acc = lut_eval(acc, *lut_refs, ane_mode=True)
         o_ref[...] = acc.astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "ane_mode"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "ane_mode", "epilogue"))
 def anemm(
     a: jnp.ndarray,                 # (M, K)
     b: jnp.ndarray,                 # (K, N)
@@ -65,6 +76,7 @@ def anemm(
     bn: int = 128,
     bk: int = 512,
     ane_mode: bool = False,
+    epilogue: str | None = None,    # LUT activation fused at the output port
 ) -> jnp.ndarray:
     m, k = a.shape
     k2, n = b.shape
@@ -88,19 +100,28 @@ def anemm(
     if bias is not None:
         operands.append(pad_to(bias.reshape(1, -1), 1, bn))
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+    if epilogue is not None:
+        from repro.kernels.act_lut.ops import lut_table_operands
+        operands.extend(lut_table_operands(epilogue))
+        in_specs.extend(
+            pl.BlockSpec((1, c), lambda i, j, kk: (0, 0))
+            for c in (33, 32, 32, 2))
 
     def kernel(*refs):
         a_ref, b_ref = refs[0], refs[1]
         idx = 2
-        scale_ref = bias_ref = None
+        scale_ref = bias_ref = lut_refs = None
         if scale is not None:
             scale_ref = refs[idx]
             idx += 1
         if bias is not None:
             bias_ref = refs[idx]
             idx += 1
+        if epilogue is not None:
+            lut_refs = refs[idx:idx + 4]
+            idx += 4
         o_ref, acc_ref = refs[-2], refs[-1]
-        _kernel(a_ref, b_ref, scale_ref, bias_ref, o_ref, acc_ref,
+        _kernel(a_ref, b_ref, scale_ref, bias_ref, lut_refs, o_ref, acc_ref,
                 nk=nk, ane_mode=ane_mode, out_dtype=out_dtype)
 
     out = pl.pallas_call(

@@ -37,6 +37,9 @@ def _bwd(ane_mode, res, g):
 matmul.defvjp(_fwd, _bwd)
 
 
-def linear(a, b, scale=None, bias=None, *, ane_mode: bool = False):
-    """Inference-path linear with the fused epilogue (scale/bias/saturate)."""
-    return _anemm_kernel(a, b, scale, bias, ane_mode=ane_mode)
+def linear(a, b, scale=None, bias=None, *, ane_mode: bool = False,
+           epilogue: str | None = None):
+    """Inference-path linear with the fused epilogue (scale/bias/saturate,
+    plus an optional LUT activation evaluated at the output port)."""
+    return _anemm_kernel(a, b, scale, bias, ane_mode=ane_mode,
+                         epilogue=epilogue)

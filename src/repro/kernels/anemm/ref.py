@@ -8,7 +8,8 @@ import jax.numpy as jnp
 from repro.core import hal
 
 
-def anemm_ref(a, b, scale=None, bias=None, *, ane_mode: bool = False):
+def anemm_ref(a, b, scale=None, bias=None, *, ane_mode: bool = False,
+              epilogue: str | None = None):
     acc = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)
     if scale is not None:
@@ -18,4 +19,10 @@ def anemm_ref(a, b, scale=None, bias=None, *, ane_mode: bool = False):
     if ane_mode:
         acc = jnp.where(acc >= hal.ACCUM_OUT_CEILING, jnp.inf, acc)
         acc = jnp.where(acc <= -hal.ACCUM_OUT_CEILING, -jnp.inf, acc)
-    return acc.astype(a.dtype)
+    out = acc.astype(a.dtype)
+    if epilogue is not None:
+        # same semantics as the fused kernel: the matmul result rounds to the
+        # out dtype, then the LUT evaluates it through the fp32 widening
+        from repro.kernels.act_lut.ops import lut_apply_ref
+        out = lut_apply_ref(out, epilogue)
+    return out

@@ -1,0 +1,3 @@
+"""Conv/pooling kernel family (NHWC) with fused act_lut epilogues."""
+
+from repro.kernels.conv.ops import avg_pool, conv2d, max_pool  # noqa: F401

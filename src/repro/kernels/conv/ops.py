@@ -1,0 +1,59 @@
+"""Public wrappers for the conv/pooling family.
+
+`conv2d` is the inference entry point (bias + optional fused LUT epilogue)
+with training-grade gradients: forward runs the Pallas kernel, backward
+differentiates the jnp reference (the transpose of a conv is itself a conv
+pair XLA already emits optimally — the same convention as anemm's XLA
+backward). The fused-LUT backward inherits the PWL segment-slope derivative
+through `lut_apply_ref`. Pooling is forward-only (serving path); its oracle
+is differentiable for anyone who needs gradients.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv.conv2d import conv2d as _conv2d_kernel
+from repro.kernels.conv.pool import avg_pool, max_pool  # noqa: F401 — re-export
+from repro.kernels.conv.ref import conv2d_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _conv(x, w, bias, stride, padding, ane_mode, epilogue):
+    return _conv2d_kernel(x, w, bias, stride=stride, padding=padding,
+                          ane_mode=ane_mode, epilogue=epilogue)
+
+
+def _conv_fwd(x, w, bias, stride, padding, ane_mode, epilogue):
+    return _conv(x, w, bias, stride, padding, ane_mode, epilogue), \
+        (x, w, bias)
+
+
+def _conv_bwd(stride, padding, ane_mode, epilogue, res, g):
+    x, w, bias = res
+
+    def ref(*diff_args):
+        xx, ww = diff_args[0], diff_args[1]
+        bb = diff_args[2] if bias is not None else None
+        return conv2d_ref(xx, ww, bb, stride=stride, padding=padding,
+                          ane_mode=ane_mode, epilogue=epilogue)
+
+    args = (x, w) if bias is None else (x, w, bias)
+    _, vjp = jax.vjp(ref, *args)
+    grads = vjp(g)
+    return grads if bias is not None else (*grads, None)
+
+
+_conv.defvjp(_conv_fwd, _conv_bwd)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray | None = None,
+           *, stride: tuple[int, int] = (1, 1), padding: str = "SAME",
+           ane_mode: bool = False,
+           epilogue: str | None = None) -> jnp.ndarray:
+    """NHWC conv through the Pallas kernel, differentiable, with the bias /
+    saturation / LUT-activation epilogue fused at the output port."""
+    return _conv(x, w, bias, stride, padding, ane_mode, epilogue)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the conv/pooling family.
+
+SAME/VALID resolve through the same `pad_explicit` formula the kernels use,
+so oracle and kernel always agree on which cells a window covers. The fused
+`epilogue=` reference is kernel-then-LUT: the conv result rounds to the out
+dtype (the store of the separate-op pipeline) before `lut_apply_ref` widens
+it back to fp32 — matching the rounding point the fused kernels replicate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hal
+from repro.kernels.conv.conv2d import pad_explicit
+
+
+def conv2d_ref(x, w, bias=None, *, stride=(1, 1), padding="SAME",
+               ane_mode: bool = False, epilogue: str | None = None):
+    """NHWC conv via `lax.conv_general_dilated`, fp32 accumulation."""
+    kh, kw = w.shape[0], w.shape[1]
+    sh, sw = stride
+    pads = (pad_explicit(x.shape[1], kh, sh, padding),
+            pad_explicit(x.shape[2], kw, sw, padding))
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (sh, sw), pads,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    if ane_mode:
+        acc = jnp.where(acc >= hal.ACCUM_OUT_CEILING, jnp.inf, acc)
+        acc = jnp.where(acc <= -hal.ACCUM_OUT_CEILING, -jnp.inf, acc)
+    out = acc.astype(x.dtype)
+    if epilogue is not None:
+        from repro.kernels.act_lut.ops import lut_apply_ref
+        out = lut_apply_ref(out, epilogue)
+    return out
+
+
+def _pool_ref(x, *, window, stride, padding, kind):
+    wh, ww = window
+    sh, sw = stride
+    pads = ((0, 0),
+            pad_explicit(x.shape[1], wh, sh, padding),
+            pad_explicit(x.shape[2], ww, sw, padding),
+            (0, 0))
+    xf = x.astype(jnp.float32)
+    if kind == "avg":
+        out = jax.lax.reduce_window(
+            xf, 0.0, jax.lax.add, (1, wh, ww, 1), (1, sh, sw, 1),
+            pads) * (1.0 / (wh * ww))
+    else:
+        out = jax.lax.reduce_window(
+            xf, -jnp.inf, jax.lax.max, (1, wh, ww, 1), (1, sh, sw, 1), pads)
+    return out.astype(x.dtype)
+
+
+def avg_pool_ref(x, *, window, stride=None, padding="VALID"):
+    return _pool_ref(x, window=window, stride=stride or window,
+                     padding=padding, kind="avg")
+
+
+def max_pool_ref(x, *, window, stride=None, padding="VALID"):
+    return _pool_ref(x, window=window, stride=stride or window,
+                     padding=padding, kind="max")

@@ -589,11 +589,163 @@ def _register_specdec_tree() -> None:
 
 
 # ---------------------------------------------------------------------------
+# conv2d / avg_pool / max_pool — the conv-engine family (NHWC)
+# ---------------------------------------------------------------------------
+
+
+def _conv_tol(dtype) -> tuple[float, float]:
+    # fp32 covers tap-loop vs lax accumulation-order differences; narrow
+    # dtypes add a store rounding and, for fused-LUT cases, a possible PWL
+    # segment flip at a knot boundary (bounded by the fp16 table grid).
+    return (2e-3, 2e-3) if dtype == jnp.float32 else (3e-2, 3e-2)
+
+
+def _conv2d_inputs(case: ShapeCase, dtype, rng) -> dict:
+    b, h, w, cin, cout, kh, kw, sh, sw, same = case.dims
+    out = {"x": _normal(rng, (b, h, w, cin), dtype),
+           "w": jnp.asarray(rng.normal(size=(kh, kw, cin, cout)) * 0.2, dtype),
+           "bias": _normal(rng, (cout,), dtype),
+           "stride": (sh, sw), "padding": "SAME" if same else "VALID"}
+    if case.name.startswith("fused_"):
+        out["epilogue"] = case.name.split("_", 1)[1]
+    return out
+
+
+def _conv2d_vjp(inputs: dict):
+    from repro.kernels.conv import ops as conv_ops
+    from repro.kernels.conv.ref import conv2d_ref
+
+    x = inputs["x"].astype(jnp.float32)
+    w = inputs["w"].astype(jnp.float32)
+    st, pad = inputs["stride"], inputs["padding"]
+    return (lambda x, w: conv_ops.conv2d(x, w, stride=st, padding=pad).sum(),
+            lambda x, w: conv2d_ref(x, w, stride=st, padding=pad).sum(),
+            (x, w))
+
+
+def _register_conv2d() -> None:
+    from repro.kernels.conv import ops as conv_ops
+    from repro.kernels.conv.ref import conv2d_ref
+
+    register(KernelSpec(
+        name="conv2d",
+        capability_op="conv2d",
+        dtypes=(jnp.float32, jnp.bfloat16, jnp.float16),
+        cases=(
+            # dims = (B, H, W, Cin, Cout, KH, KW, SH, SW, same?)
+            ShapeCase("same_s1", (2, 16, 16, 8, 128, 3, 3, 1, 1, 1)),
+            ShapeCase("strided", (1, 20, 16, 8, 128, 3, 3, 2, 2, 1)),
+            ShapeCase("fused_gelu", (1, 12, 12, 8, 128, 3, 3, 1, 1, 1)),
+            ShapeCase("valid_s1", (2, 10, 10, 16, 64, 3, 3, 1, 1, 0)),
+            ShapeCase("ragged_tail", (1, 17, 13, 5, 33, 3, 3, 2, 2, 1),
+                      edge=True),
+            ShapeCase("pointwise", (2, 8, 8, 24, 48, 1, 1, 1, 1, 1),
+                      edge=True),
+            ShapeCase("stride_gt_k", (1, 12, 12, 8, 16, 2, 2, 3, 3, 0),
+                      edge=True),
+        ),
+        make_inputs=_conv2d_inputs,
+        run_kernel=lambda i: conv_ops.conv2d(
+            i["x"], i["w"], i["bias"], stride=i["stride"],
+            padding=i["padding"], epilogue=i.get("epilogue")),
+        run_oracle=lambda i: conv2d_ref(
+            i["x"], i["w"], i["bias"], stride=i["stride"],
+            padding=i["padding"], epilogue=i.get("epilogue")),
+        tol=_conv_tol,
+        cost=lambda c, dt: OpCost(
+            f"conv2d/{c.name}",
+            2.0 * c.dims[0] * -(-c.dims[1] // c.dims[7])
+            * -(-c.dims[2] // c.dims[8])
+            * c.dims[5] * c.dims[6] * c.dims[3] * c.dims[4],
+            float(_itemsize(dt)) * (c.dims[0] * c.dims[1] * c.dims[2]
+                                    * c.dims[3]
+                                    + c.dims[5] * c.dims[6] * c.dims[3]
+                                    * c.dims[4]
+                                    + c.dims[0] * -(-c.dims[1] // c.dims[7])
+                                    * -(-c.dims[2] // c.dims[8])
+                                    * c.dims[4])),
+        make_vjp=_conv2d_vjp,
+    ))
+
+
+def _pool_inputs(case: ShapeCase, dtype, rng) -> dict:
+    b, h, w, c, wh, ww, sh, sw, same = case.dims
+    return {"x": _normal(rng, (b, h, w, c), dtype),
+            "window": (wh, ww), "stride": (sh, sw),
+            "padding": "SAME" if same else "VALID"}
+
+
+_POOL_CASES = (
+    # dims = (B, H, W, C, WH, WW, SH, SW, same?)
+    ShapeCase("win2_s2", (2, 16, 16, 32, 2, 2, 2, 2, 0)),
+    ShapeCase("win3_s2_same", (1, 15, 15, 16, 3, 3, 2, 2, 1)),
+    ShapeCase("overlap", (2, 12, 12, 8, 3, 3, 1, 1, 0)),
+    ShapeCase("ragged_tail", (1, 17, 13, 5, 3, 3, 2, 2, 1), edge=True),
+    ShapeCase("global", (2, 8, 8, 16, 8, 8, 8, 8, 0), edge=True),
+)
+
+
+def _pool_cost(kind: str):
+    def cost(c, dt):
+        ohw = (-(-c.dims[1] // c.dims[6])) * (-(-c.dims[2] // c.dims[7]))
+        return OpCost(
+            f"{kind}/{c.name}",
+            float(c.dims[0]) * ohw * c.dims[4] * c.dims[5] * c.dims[3],
+            float(_itemsize(dt)) * c.dims[0]
+            * (c.dims[1] * c.dims[2] + ohw) * c.dims[3])
+    return cost
+
+
+def _register_avg_pool() -> None:
+    from repro.kernels.conv import ops as conv_ops
+    from repro.kernels.conv.ref import avg_pool_ref
+
+    register(KernelSpec(
+        name="avg_pool",
+        capability_op="avg_pool",
+        dtypes=(jnp.float32, jnp.bfloat16, jnp.float16),
+        cases=_POOL_CASES,
+        make_inputs=_pool_inputs,
+        run_kernel=lambda i: conv_ops.avg_pool(
+            i["x"], window=i["window"], stride=i["stride"],
+            padding=i["padding"]),
+        run_oracle=lambda i: avg_pool_ref(
+            i["x"], window=i["window"], stride=i["stride"],
+            padding=i["padding"]),
+        # one fp32 sum each side; only the tap order differs
+        tol=lambda dt: (1e-5, 1e-5) if dt == jnp.float32 else (1e-2, 1e-2),
+        cost=_pool_cost("avg_pool"),
+    ))
+
+
+def _register_max_pool() -> None:
+    from repro.kernels.conv import ops as conv_ops
+    from repro.kernels.conv.ref import max_pool_ref
+
+    register(KernelSpec(
+        name="max_pool",
+        capability_op="max_pool",
+        dtypes=(jnp.float32, jnp.bfloat16, jnp.float16),
+        cases=_POOL_CASES,
+        make_inputs=_pool_inputs,
+        run_kernel=lambda i: conv_ops.max_pool(
+            i["x"], window=i["window"], stride=i["stride"],
+            padding=i["padding"]),
+        run_oracle=lambda i: max_pool_ref(
+            i["x"], window=i["window"], stride=i["stride"],
+            padding=i["padding"]),
+        tol=lambda dt: (0.0, 0.0),      # max is order-free: exact or wrong
+        cost=_pool_cost("max_pool"),
+    ))
+
+
+# ---------------------------------------------------------------------------
 # Registration (import-time, idempotent via the duplicate guard)
 # ---------------------------------------------------------------------------
 
 
 for _reg in (_register_anemm, _register_palette, _register_sparse,
              _register_flash, _register_decode, _register_paged_decode,
-             _register_act_lut, _register_specdec, _register_specdec_tree):
+             _register_act_lut, _register_specdec, _register_specdec_tree,
+             _register_conv2d, _register_avg_pool, _register_max_pool):
     _reg()

@@ -86,7 +86,7 @@ class Request:
     prompt: np.ndarray            # (L,) int32 token ids, L >= 1
     max_new_tokens: int
     arrival: int = 0              # scheduler step at which the request exists
-    frames: np.ndarray | None = None   # encdec only: (enc_len, d_model)
+    frames: np.ndarray | None = None   # encdec only: cfg.frame_shape
 
     def __post_init__(self) -> None:
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

@@ -275,7 +275,7 @@ def run(argv=None) -> dict:
                for L in lens]
     frames = None
     if cfg.family == "encdec":
-        frames = [np.asarray(rng.normal(size=(cfg.encoder_len, cfg.d_model)),
+        frames = [np.asarray(rng.normal(size=cfg.frame_shape),
                              np.float32) for _ in lens]
     max_len = max(lens) + args.gen
 

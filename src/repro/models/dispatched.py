@@ -213,6 +213,26 @@ def active_dispatcher() -> KernelDispatcher | None:
     return _SCOPE[-1] if _SCOPE else None
 
 
+_FUSION: list[bool] = []
+
+
+@contextlib.contextmanager
+def fuse_epilogues(on: bool) -> Iterator[None]:
+    """Scope the conv/matmul LUT-epilogue fusion choice. Fused (the default)
+    runs the activation at the producing kernel's output port — one engine
+    dispatch; unfused routes a separate `act_lut` op afterwards — the
+    two-dispatch pipeline `bench_encoder` measures against."""
+    _FUSION.append(on)
+    try:
+        yield
+    finally:
+        _FUSION.pop()
+
+
+def epilogue_fusion_active() -> bool:
+    return _FUSION[-1] if _FUSION else True
+
+
 def _dispatcher_for(w: Any) -> KernelDispatcher | None:
     """The dispatcher a call must use: the scoped one, or — for a packed
     weight that *cannot* run undispatched — a default TPU-target one."""
@@ -342,3 +362,85 @@ def decode_route(disp: KernelDispatcher, q: jnp.ndarray,
                                     window=window)
 
     return route_and_run(disp, "decode_attention", q.dtype, native, oracle)
+
+
+# ---------------------------------------------------------------------------
+# Conv-family routes (encoder stems, vision front ends)
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray,
+           bias: jnp.ndarray | None = None, *,
+           stride: tuple[int, int] = (1, 1), padding: str = "SAME",
+           act: str | None = None) -> jnp.ndarray:
+    """The conv every encoder stem calls (NHWC x, HWIO w).
+
+    * dispatcher in scope + `act` + fusion on (default): ONE routed `conv2d`
+      dispatch with the LUT activation fused at the output port;
+    * dispatcher + `act` + fusion off: a routed `conv2d` followed by a
+      routed `act_lut` — the separate-op pipeline, bit-identical output;
+    * no dispatcher: the differentiable jnp reference with the same LUT
+      numerics, so dispatched-vs-reference parity differs only by the conv
+      kernel's accumulation order.
+    """
+    from repro.kernels.conv.ref import conv2d_ref
+
+    disp = active_dispatcher()
+    if disp is None:
+        return conv2d_ref(x, w, bias, stride=stride, padding=padding,
+                          epilogue=act)
+
+    from repro.kernels.conv import ops as conv_ops
+
+    if act is not None and epilogue_fusion_active():
+        return route_and_run(
+            disp, "conv2d", x.dtype,
+            lambda: conv_ops.conv2d(x, w, bias, stride=stride,
+                                    padding=padding, epilogue=act),
+            lambda: conv2d_ref(x, w, bias, stride=stride, padding=padding,
+                               epilogue=act))
+    out = route_and_run(
+        disp, "conv2d", x.dtype,
+        lambda: conv_ops.conv2d(x, w, bias, stride=stride, padding=padding),
+        lambda: conv2d_ref(x, w, bias, stride=stride, padding=padding))
+    if act is None:
+        return out
+
+    from repro.kernels.act_lut.ops import lut_activation, lut_apply_ref
+
+    return route_and_run(
+        disp, "act_lut", out.dtype,
+        lambda: lut_activation(act)(out),
+        lambda: lut_apply_ref(out, act))
+
+
+def _pool(x: jnp.ndarray, *, window, stride, padding, kind: str):
+    from repro.kernels.conv import ops as conv_ops
+    from repro.kernels.conv import ref as conv_ref
+
+    native = conv_ops.avg_pool if kind == "avg_pool" else conv_ops.max_pool
+    oracle = (conv_ref.avg_pool_ref if kind == "avg_pool"
+              else conv_ref.max_pool_ref)
+    disp = active_dispatcher()
+    if disp is None:
+        return oracle(x, window=window, stride=stride, padding=padding)
+    return route_and_run(
+        disp, kind, x.dtype,
+        lambda: native(x, window=window, stride=stride, padding=padding),
+        lambda: oracle(x, window=window, stride=stride, padding=padding))
+
+
+def avg_pool(x: jnp.ndarray, *, window: tuple[int, int],
+             stride: tuple[int, int] | None = None,
+             padding: str = "VALID") -> jnp.ndarray:
+    """Routed NHWC average pooling (count-include-pad)."""
+    return _pool(x, window=window, stride=stride or window, padding=padding,
+                 kind="avg_pool")
+
+
+def max_pool(x: jnp.ndarray, *, window: tuple[int, int],
+             stride: tuple[int, int] | None = None,
+             padding: str = "VALID") -> jnp.ndarray:
+    """Routed NHWC max pooling."""
+    return _pool(x, window=window, stride=stride or window, padding=padding,
+                 kind="max_pool")

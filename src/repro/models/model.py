@@ -257,7 +257,7 @@ class Model:
                 specs["targets"] = jax.ShapeDtypeStruct((b, s), i32)
             if cfg.family == "encdec":
                 specs["frames"] = jax.ShapeDtypeStruct(
-                    (b, cfg.encoder_len, cfg.d_model), self.dtype)
+                    (b,) + cfg.frame_shape, self.dtype)
             return specs
         # decode: one new token against a cache of seq_len
         cache_spec = jax.eval_shape(

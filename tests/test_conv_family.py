@@ -1,0 +1,178 @@
+"""Conv/pooling family: fused-epilogue bit-identity and capability gating.
+
+The fused `epilogue=` contract is exact: a kernel that fuses the LUT
+activation at its output port must produce bit-identical results to the
+two-dispatch pipeline (kernel, store, then the act_lut kernel). These tests
+pin that, plus the op-by-device story: a HAL target whose feature bytes deny
+`conv2d` must route the conv to the jnp oracle — silently, with a recorded
+reason — and still agree numerically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hal
+from repro.core.dispatch import KernelDispatcher
+from repro.kernels import registry
+from repro.models import dispatched as dsp
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue bit-identity (the tentpole invariant)
+# ---------------------------------------------------------------------------
+
+
+def _conv_operands(dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 9, 11, 6)), dtype)
+    w = jnp.asarray(rng.normal(size=(3, 3, 6, 24)) * 0.2, dtype)
+    b = jnp.asarray(rng.normal(size=(24,)), dtype)
+    return x, w, b
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["gelu", "sigmoid"])
+def test_conv_fused_epilogue_bit_identical(dtype, act):
+    from repro.kernels.act_lut.ops import lut_activation
+    from repro.kernels.conv import ops as conv_ops
+
+    x, w, b = _conv_operands(dtype)
+    fused = conv_ops.conv2d(x, w, b, stride=(1, 2), padding="SAME",
+                            epilogue=act)
+    separate = lut_activation(act)(
+        conv_ops.conv2d(x, w, b, stride=(1, 2), padding="SAME"))
+    assert fused.dtype == separate.dtype
+    assert np.array_equal(np.asarray(fused, np.float32),
+                          np.asarray(separate, np.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["gelu", "swish"])
+def test_anemm_fused_epilogue_bit_identical(dtype, act):
+    from repro.kernels.act_lut.ops import lut_activation
+    from repro.kernels.anemm.anemm import anemm
+
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(48, 160)) * 0.3, dtype)
+    b = jnp.asarray(rng.normal(size=(160, 72)) * 0.3, dtype)
+    fused = anemm(a, b, epilogue=act)
+    separate = lut_activation(act)(anemm(a, b))
+    assert np.array_equal(np.asarray(fused, np.float32),
+                          np.asarray(separate, np.float32))
+
+
+def test_fused_matches_separate_reference():
+    """The oracle side holds the same contract: conv2d_ref(epilogue=) is
+    exactly lut_apply_ref over the epilogue-free conv."""
+    from repro.kernels.act_lut.ops import lut_apply_ref
+    from repro.kernels.conv.ref import conv2d_ref
+
+    x, w, b = _conv_operands(jnp.float32)
+    fused = conv2d_ref(x, w, b, stride=(2, 2), padding="VALID",
+                       epilogue="gelu")
+    separate = lut_apply_ref(
+        conv2d_ref(x, w, b, stride=(2, 2), padding="VALID"), "gelu")
+    assert np.array_equal(np.asarray(fused), np.asarray(separate))
+
+
+# ---------------------------------------------------------------------------
+# Dispatched entry point: fusion scope and dispatch counts
+# ---------------------------------------------------------------------------
+
+
+def test_dispatched_conv_fused_vs_unfused_same_bits_fewer_routes():
+    x, w, b = _conv_operands(jnp.float32)
+
+    d_fused = KernelDispatcher()
+    with dsp.use_dispatcher(d_fused), dsp.fuse_epilogues(True):
+        out_fused = dsp.conv2d(x, w, b, stride=(1, 2), act="gelu")
+
+    d_unfused = KernelDispatcher()
+    with dsp.use_dispatcher(d_unfused), dsp.fuse_epilogues(False):
+        out_unfused = dsp.conv2d(x, w, b, stride=(1, 2), act="gelu")
+
+    assert np.array_equal(np.asarray(out_fused), np.asarray(out_unfused))
+    assert [r.kernel for r in d_fused.routes] == ["conv2d"]
+    assert [r.kernel for r in d_unfused.routes] == ["conv2d", "act_lut"]
+    assert all(r.native for r in d_fused.routes)
+    assert all(r.native for r in d_unfused.routes)
+
+
+def test_undispatched_conv_matches_routed_oracle():
+    """No dispatcher in scope -> the differentiable reference with the same
+    LUT numerics, so model code can call dsp.conv2d unconditionally."""
+    from repro.kernels.conv.ref import conv2d_ref
+
+    x, w, b = _conv_operands(jnp.float32, seed=3)
+    got = dsp.conv2d(x, w, b, stride=(1, 1), act="gelu")
+    want = conv2d_ref(x, w, b, stride=(1, 1), padding="SAME",
+                      epilogue="gelu")
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Capability gating: feature-byte denial falls back to the oracle
+# ---------------------------------------------------------------------------
+
+
+def _denied(op: str) -> hal.Target:
+    return dataclasses.replace(
+        hal.TPU_V5E, name=f"tpu-no-{op}",
+        op_floor={**hal.TPU_V5E.op_floor, op: False})
+
+
+@pytest.mark.parametrize("name,op", [("conv2d", "conv2d"),
+                                     ("avg_pool", "avg_pool"),
+                                     ("max_pool", "max_pool")])
+def test_denied_op_routes_to_oracle(name, op):
+    disp = KernelDispatcher(_denied(op))
+    route = disp.resolve(name, jnp.float32)
+    assert not route.native
+    assert op in route.reason
+
+    native = KernelDispatcher()
+    assert native.resolve(name, jnp.float32).native
+
+
+def test_conv2d_denied_target_still_serves_the_stem():
+    """The regression the satellite pins: with `conv2d` struck from the
+    feature bytes, dispatched conv calls run the oracle leg and the numbers
+    still match the native path at registry tolerance."""
+    x, w, b = _conv_operands(jnp.float32, seed=5)
+
+    with dsp.use_dispatcher(KernelDispatcher()):
+        native = dsp.conv2d(x, w, b, stride=(1, 2), act="gelu")
+
+    gated = KernelDispatcher(_denied("conv2d"))
+    with dsp.use_dispatcher(gated):
+        fallback = dsp.conv2d(x, w, b, stride=(1, 2), act="gelu")
+
+    assert [r.backend for r in gated.routes] == ["oracle"]
+    assert gated.routes[0].reason
+    rtol, atol = registry.get("conv2d").tol(jnp.float32)
+    np.testing.assert_allclose(np.asarray(fallback), np.asarray(native),
+                               rtol=rtol, atol=atol)
+
+
+def test_pool_routes_through_dispatcher():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(2, 10, 12, 5)), jnp.float32)
+    disp = KernelDispatcher()
+    with dsp.use_dispatcher(disp):
+        a = dsp.avg_pool(x, window=(2, 2))
+        m = dsp.max_pool(x, window=(3, 3), stride=(2, 2), padding="SAME")
+    assert [r.kernel for r in disp.routes] == ["avg_pool", "max_pool"]
+    assert all(r.native for r in disp.routes)
+
+    from repro.kernels.conv.ref import avg_pool_ref, max_pool_ref
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(avg_pool_ref(x, window=(2, 2))),
+        rtol=1e-5, atol=1e-5)
+    assert np.array_equal(
+        np.asarray(m),
+        np.asarray(max_pool_ref(x, window=(3, 3), stride=(2, 2),
+                                padding="SAME")))

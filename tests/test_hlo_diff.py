@@ -1,0 +1,177 @@
+"""HLO-diff regression: the ProgramCache key and the lowered program are
+deterministic functions of (program structure, shapes, options).
+
+The serving stack leans on `content_hash` for compile-stability: two
+processes (or two rounds in one process) tracing the same program over the
+same specs must land on the same cache entry, and the HLO they lower must be
+identical text modulo memory addresses. A refactor that makes tracing
+nondeterministic (dict-order-dependent closure, address-bearing param,
+unstable name) silently degrades every warm start into a recompile — these
+tests pin the three program families the servers cache: decode steps,
+prefill chunks, and the conv-stem programs the encoder scenario added.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.dispatch import ProgramCache, content_hash
+from repro.models.model import build_model
+
+_ADDR = re.compile(r"0x[0-9a-f]+")
+
+
+def _scrub(text: str) -> str:
+    return _ADDR.sub("0x", text)
+
+
+def _hlo(fn, *args) -> str:
+    return _scrub(jax.jit(fn).lower(*args).as_text())
+
+
+@pytest.fixture(scope="module")
+def decoder():
+    cfg = configs.get_smoke("tinyllama-1.1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def encoder():
+    cfg = configs.get_smoke("whisper-small")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _decode_args(model, params, b=2, ctx=16):
+    caches = model.init_cache(b, ctx)
+    token = jnp.zeros((b, 1), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    return params, caches, token, pos
+
+
+def _chunk_args(model, params, b=2, ctx=16, c=4):
+    caches = model.init_cache(b, ctx)
+    tokens = jnp.zeros((b, c), jnp.int32)
+    pos0 = jnp.zeros((b,), jnp.int32)
+    return params, caches, tokens, pos0
+
+
+def _conv_args(b=1, t=12, mels=8, d=16):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, 1, t, mels)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(1, 3, mels, d)), jnp.float32)
+    return x, w
+
+
+def _conv_program(x, w):
+    from repro.kernels.conv.ref import conv2d_ref
+    return conv2d_ref(x, w, stride=(1, 2), padding="SAME", epilogue="gelu")
+
+
+# ---------------------------------------------------------------------------
+# Stability: same program + same specs -> same key, same HLO
+# ---------------------------------------------------------------------------
+
+
+def test_decode_program_hash_is_stable(decoder):
+    _, model, params = decoder
+    args = _decode_args(model, params)
+    hashes = {content_hash(model.decode_step, args) for _ in range(3)}
+    assert len(hashes) == 1
+    # fresh caches (fresh memo tables, fresh receiver ids) agree too
+    keys = {ProgramCache()._key(model.decode_step, args, "") for _ in range(2)}
+    assert keys == hashes
+
+
+def test_chunk_program_hash_is_stable(decoder):
+    _, model, params = decoder
+    args = _chunk_args(model, params)
+    hashes = {content_hash(model.prefill_chunk, args) for _ in range(3)}
+    assert len(hashes) == 1
+
+
+def test_conv_program_hash_is_stable():
+    args = _conv_args()
+    hashes = {content_hash(_conv_program, args) for _ in range(3)}
+    assert len(hashes) == 1
+
+
+def test_decode_hlo_is_stable_across_lowerings(decoder):
+    _, model, params = decoder
+    args = _decode_args(model, params)
+    assert _hlo(model.decode_step, *args) == _hlo(model.decode_step, *args)
+
+
+def test_chunk_hlo_is_stable_across_lowerings(decoder):
+    _, model, params = decoder
+    args = _chunk_args(model, params)
+    assert _hlo(model.prefill_chunk, *args) == _hlo(model.prefill_chunk, *args)
+
+
+def test_conv_hlo_is_stable_across_lowerings():
+    args = _conv_args()
+    assert _hlo(_conv_program, *args) == _hlo(_conv_program, *args)
+
+
+def test_encoder_prefill_hash_is_stable(encoder):
+    cfg, model, params = encoder
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "frames": jnp.asarray(rng.normal(size=(2,) + cfg.frame_shape),
+                                   jnp.float32)}
+    args = (params, batch)
+    hashes = {content_hash(model.prefill, args) for _ in range(2)}
+    assert len(hashes) == 1
+
+
+def test_warm_start_hits_the_cache(decoder):
+    _, model, params = decoder
+    args = _decode_args(model, params)
+    pc = ProgramCache()
+    _, k1 = pc.compile(model.decode_step, *args)
+    assert not pc.is_new_compile_required(model.decode_step, *args)
+    _, k2 = pc.compile(model.decode_step, *args)
+    assert k1 == k2 and pc.stats.hits == 1 and pc.stats.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# Sensitivity: a deliberate perturbation MUST change key and HLO
+# ---------------------------------------------------------------------------
+
+
+def test_shape_perturbation_changes_hash_and_hlo(decoder):
+    _, model, params = decoder
+    base = _chunk_args(model, params, c=4)
+    bumped = _chunk_args(model, params, c=5)
+    assert content_hash(model.prefill_chunk, base) \
+        != content_hash(model.prefill_chunk, bumped)
+    assert _hlo(model.prefill_chunk, *base) \
+        != _hlo(model.prefill_chunk, *bumped)
+
+
+def test_options_perturbation_changes_hash(decoder):
+    _, model, params = decoder
+    args = _decode_args(model, params)
+    assert content_hash(model.decode_step, args, options="donate=1") \
+        != content_hash(model.decode_step, args, options="")
+
+
+def test_conv_static_perturbation_changes_hash_and_hlo():
+    from repro.kernels.conv.ref import conv2d_ref
+
+    def stride1(x, w):
+        return conv2d_ref(x, w, stride=(1, 1), padding="SAME",
+                          epilogue="gelu")
+
+    args = _conv_args()
+    assert content_hash(_conv_program, args) != content_hash(stride1, args)
+    assert _hlo(_conv_program, *args) != _hlo(stride1, *args)

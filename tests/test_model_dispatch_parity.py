@@ -64,7 +64,7 @@ def _batch_for(cfg, b=2, s=32, seed=0):
         rng.integers(0, cfg.vocab, size=(b, s)), jnp.int32)
     if cfg.family == "encdec":
         batch["frames"] = jnp.asarray(
-            rng.normal(size=(b, cfg.encoder_len, cfg.d_model)), jnp.float32)
+            rng.normal(size=(b,) + cfg.frame_shape), jnp.float32)
     return batch
 
 

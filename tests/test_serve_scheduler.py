@@ -148,7 +148,7 @@ def test_greedy_parity_encdec():
     lens = [16, 9, 12]
     prompts = [rng.integers(0, cfg.vocab, size=(L,)).astype(np.int32)
                for L in lens]
-    frames = [np.asarray(rng.normal(size=(cfg.encoder_len, cfg.d_model)),
+    frames = [np.asarray(rng.normal(size=cfg.frame_shape),
                          np.float32) for _ in lens]
     outs = {}
     for schedule in ("continuous", "slo", "sequential"):
